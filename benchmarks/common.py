@@ -1,0 +1,58 @@
+"""Shared benchmark plumbing: table printing + a trained B-LeNet cached
+per process (several tables reuse it)."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import losses
+from repro.data.pipeline import mnist_like
+from repro.models import cnn as C
+
+
+def table(title: str, headers, rows) -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows
+              else len(str(h)) for i, h in enumerate(headers)]
+    fmt = "  ".join(f"{{:<{w}}}" for w in widths)
+    out = [f"== {title} ==", fmt.format(*headers),
+           fmt.format(*("-" * w for w in widths))]
+    out += [fmt.format(*(str(c) for c in r)) for r in rows]
+    return "\n".join(out) + "\n"
+
+
+@functools.lru_cache(maxsize=None)
+def trained_blenet(steps: int = 150, n: int = 2048):
+    """Train the paper's B-LeNet on the synthetic MNIST-like set."""
+    cfg = C.b_lenet()
+    data = mnist_like(n, seed=0, hard_frac=0.3)
+    params = C.init_cnn(jax.random.PRNGKey(0), cfg)
+
+    @jax.jit
+    def step(p, x, y, lr):
+        def loss_fn(p):
+            outs = C.forward_all_exits(p, cfg, x)
+            return losses.cnn_joint_loss(outs, y, (0.3, 1.0))[0]
+        return jax.tree.map(lambda a, b: a - lr * b, p,
+                            jax.grad(loss_fn)(p))
+
+    x, y = jnp.asarray(data["x"]), jnp.asarray(data["y"])
+    for i in range(steps):
+        lo = (i * 128) % (n - 128)
+        params = step(params, x[lo:lo + 128], y[lo:lo + 128], 0.05)
+    return cfg, params, data
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds per call (jit-compiled callables)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))

@@ -1,0 +1,65 @@
+"""Fig. 9 — Throughput-Area Pareto curves: optimized baseline (red line)
+vs ATHEENA combined designs, with the q = p ± 5% robustness band.
+
+9a analogue: the analytic optimizer's predicted points over resource
+budgets. 9b analogue: runtime throughput from the two-stage queue
+simulator on randomized test sequences with known q (the board-measurement
+stand-in this container supports)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import table
+from repro.core import dse, perf_model as pm
+from repro.core.tap import combine
+from repro.models.cnn import b_lenet
+from repro.core.conditional import simulate_two_stage_queue
+
+P_PAPER = 0.25
+BUDGETS = (32, 64, 96, 128, 192, 256, 384, 512)
+
+
+def run(n_seeds: int = 3) -> dict:
+    cfg = b_lenet()
+    w1 = pm.cnn_stage_workloads(cfg, 0) + pm.cnn_exit_workloads(cfg, 0)
+    w2 = pm.cnn_stage_workloads(cfg, 1)
+    wb = pm.cnn_stage_workloads(cfg, 0) + pm.cnn_stage_workloads(cfg, 1)
+    tap1 = dse.cnn_tap_sa(w1, BUDGETS, n_seeds=n_seeds, name="stage1")
+    tap2 = dse.cnn_tap_sa(w2, BUDGETS, n_seeds=n_seeds, name="stage2")
+    base = dse.cnn_tap_sa(wb, BUDGETS, n_seeds=n_seeds, name="baseline")
+
+    rows, curve = [], []
+    rng = np.random.default_rng(0)
+    for budget in BUDGETS:
+        comb = combine(tap1, tap2, P_PAPER, (budget, budget))
+        bpt = base.query((budget, budget))
+        if comb is None or bpt is None:
+            continue
+        qthr = {}
+        for q in (0.20, 0.25, 0.30):
+            seq = (rng.random(2048) < q).astype(int)
+            r = simulate_two_stage_queue(
+                seq, stage1_rate=comb.stage1.throughput,
+                stage2_rate=comb.stage2.throughput,
+                buffer_depth=max(16, int(0.15 * 2048)))
+            qthr[q] = r["throughput"]
+        rows.append([budget, f"{bpt.throughput:.0f}",
+                     f"{comb.design_throughput:.0f}",
+                     f"{comb.design_throughput / bpt.throughput:.2f}x",
+                     f"{qthr[0.20]:.0f}", f"{qthr[0.25]:.0f}",
+                     f"{qthr[0.30]:.0f}"])
+        curve.append({"budget": budget, "baseline": bpt.throughput,
+                      "atheena": comb.design_throughput, "sim_q": qthr})
+    txt = table(
+        f"Fig. 9 TAP curves — B-LeNet, p={P_PAPER} (samples/s, 125MHz model)",
+        ["budget(MACs)", "baseline", "ATHEENA(pred)", "gain",
+         "sim q=20%", "sim q=25%", "sim q=30%"], rows)
+    return {"text": txt, "curve": curve}
+
+
+def main() -> None:
+    print(run()["text"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Dry-run profiler for the hillclimb: lower+compile one cell and print the
+loop-weighted byte/flop breakdown (per-opcode + top instructions) plus
+collective inventory. This is the 'profile' of the §Perf methodology —
+no wall clock exists on this host, the lowered IR is the evidence.
+
+  PYTHONPATH=src python -m benchmarks.profile_cell --arch qwen2-7b \
+      --shape prefill_32k [--multi-pod]
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+import argparse
+import re
+
+import jax
+
+from repro.configs.archs import ARCHS, SHAPES
+from repro.launch import hlo_analysis as HA
+from repro.launch import steps as S
+from repro.launch.mesh import make_production_mesh
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--dump", default=None, help="write HLO text here")
+    args = ap.parse_args(argv)
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    cell = S.make_cell(ARCHS[args.arch], mesh, SHAPES[args.shape])
+    with mesh:
+        compiled = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
+                           donate_argnums=cell.donate
+                           ).lower(*cell.args).compile()
+    text = compiled.as_text()
+    if args.dump:
+        with open(args.dump, "w") as f:
+            f.write(text)
+    a = HA.analyze(text, breakdown=True)
+    chips = mesh.size
+    print(f"== {args.arch} x {args.shape} on {chips} chips ==")
+    print(f"flops/dev {a['flops']:.3e}  bytes/dev {a['bytes_accessed']:.3e}  "
+          f"coll/dev {a['coll_total']:.3e}  ({a['collective_count']:.0f} ops)")
+    print("\n-- bytes by opcode --")
+    for op, b in list(a["by_opcode"].items())[:14]:
+        print(f"  {op:<28} {b:.3e}  ({b / a['bytes_accessed']:.1%})")
+    print("\n-- top instructions (bytes x trips) --")
+    # resolve op_name metadata for the top entries
+    meta = {}
+    for m in re.finditer(r"%([\w\.\-]+) = .*op_name=\"([^\"]+)\"", text):
+        meta[m.group(1)] = m.group(2)
+    for b, name, op, mult in a["top"][:22]:
+        hint = meta.get(name, "")[:90]
+        print(f"  {b:.3e}  x{mult:<6.0f} {op:<16} {name:<28} {hint}")
+    print("\n-- collectives --")
+    for k in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+              "collective-permute"):
+        if a.get(f"coll_{k}"):
+            print(f"  {k:<20} {a[f'coll_{k}']:.3e}")
+    mem = compiled.memory_analysis()
+    print(f"\n-- memory/dev -- args {mem.argument_size_in_bytes/1e9:.2f}GB  "
+          f"temp {mem.temp_size_in_bytes/1e9:.2f}GB  "
+          f"output {mem.output_size_in_bytes/1e9:.2f}GB")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,58 @@
+"""§Roofline — render the per-(arch x shape x mesh) roofline table from the
+dry-run JSON records (launch/dryrun.py --json). Pure formatting: the
+numbers come from the compiled HLO via the loop-aware analyzer."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import table
+
+DEFAULT_FILES = ("/root/repo/dryrun_single.json", "/root/repo/dryrun_multi.json")
+
+
+def _fmt_row(r) -> list:
+    rl = r["roofline"]
+    return [
+        r["arch"], r["shape"], r["chips"],
+        f"{rl['t_compute']:.4f}", f"{rl['t_memory']:.4f}",
+        f"{rl['t_collective']:.4f}", rl["bottleneck"],
+        f"{rl['useful_flops_frac']:.1%}", f"{rl['mfu_bound']:.2%}",
+        f"{rl['throughput']:,.1f}",
+    ]
+
+
+def run(files=DEFAULT_FILES) -> dict:
+    rows, skips, missing = [], [], []
+    recs = []
+    for f in files:
+        if not os.path.exists(f):
+            missing.append(f)
+            continue
+        with open(f) as fh:
+            recs.extend(json.load(fh))
+    for r in recs:
+        if r.get("status") == "ok":
+            rows.append(_fmt_row(r))
+        elif r.get("status") == "skipped":
+            skips.append([r["arch"], r["shape"], r["reason"][:60]])
+    txt = table(
+        "§Roofline — per-cell terms (seconds/step; v5e: 197TF bf16, "
+        "819GB/s HBM, 50GB/s ICI)",
+        ["arch", "shape", "chips", "t_comp", "t_mem", "t_coll",
+         "bound", "useful-FLOPs", "MFU@bound", "samples/s"], rows)
+    if skips:
+        txt += "\n" + table("documented skips",
+                            ["arch", "shape", "reason"], skips)
+    if missing:
+        txt += f"\n(missing dry-run files: {missing} — run " \
+               "`python -m repro.launch.dryrun --json <f>` first)\n"
+    return {"text": txt, "n_ok": len(rows), "n_skip": len(skips)}
+
+
+def main() -> None:
+    print(run()["text"])
+
+
+if __name__ == "__main__":
+    main()

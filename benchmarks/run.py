@@ -1,0 +1,49 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--fast]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer SA seeds (CI smoke)")
+    ap.add_argument("--only", default=None, help="run a single benchmark")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (fig9_tap, roofline, table1_resources,
+                            table2_overhead, table3_throughput,
+                            table4_networks)
+    seeds = 1 if args.fast else 3
+    benches = [
+        ("fig9_tap", lambda: fig9_tap.run(n_seeds=seeds)),
+        ("table1_resources", lambda: table1_resources.run(n_seeds=seeds)),
+        ("table2_overhead", table2_overhead.run),
+        ("table3_throughput", table3_throughput.run),
+        ("table4_networks", lambda: table4_networks.run(n_seeds=seeds)),
+        ("roofline", roofline.run),
+    ]
+    failures = 0
+    for name, fn in benches:
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            out = fn()
+            print(out["text"])
+            print(f"[{name}: {time.time() - t0:.1f}s]\n", flush=True)
+        except Exception:
+            failures += 1
+            print(f"[{name}: FAILED]", flush=True)
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,55 @@
+"""Table II analogue — Early-Exit overhead: the resource share attributable
+to the *additional* EE machinery (exit classifier layers + exit decision +
+conditional buffering) vs the backbone, for the paper's CNNs and the LM
+architectures (exit head + decision + compaction FLOPs/bytes)."""
+from __future__ import annotations
+
+from benchmarks.common import table
+from repro.core import early_exit as ee
+from repro.core import perf_model as pm
+from repro.models.cnn import b_alexnet, b_lenet, triple_wins_lenet
+from repro.models.registry import get_arch
+
+LM_ARCHS = ("qwen2-1.5b", "qwen2-7b", "deepseek-v2-lite-16b", "grok-1-314b")
+
+
+def run() -> dict:
+    rows = []
+    # --- CNNs: MAC-unit overhead of the exit path ---
+    for mk in (b_lenet, triple_wins_lenet, b_alexnet):
+        cfg = mk()
+        w_exit = sum(pm.cnn_exit_workloads(cfg, 0))
+        w_bb = sum(pm.cnn_stage_workloads(cfg, 0)) + \
+            sum(pm.cnn_stage_workloads(cfg, 1))
+        # buffer bytes: stage-1 output feature map held while deciding
+        h, w, c = pm._stage_out_shape(cfg, 1)
+        buf = h * w * c * 4
+        rows.append([cfg.name, f"{w_exit:,.0f}",
+                     f"{100 * w_exit / (w_exit + w_bb):.1f}%",
+                     f"{buf / 1024:.0f} KiB"])
+
+    # --- LM archs: exit head FLOPs (norm + unembed) vs one fwd pass ---
+    for a in LM_ARCHS:
+        cfg = get_arch(a)
+        spec = ee.default_spec(cfg)
+        seq = 4096
+        f_exit = 2.0 * cfg.d_model * cfg.vocab          # per decided token
+        f_bb = pm.stage_flops_per_sample(cfg, 0, cfg.n_layers,
+                                         kind="prefill", seq_len=seq) / seq
+        buf = seq * cfg.d_model * 2                     # slab row, bf16
+        rows.append([a, f"{f_exit:,.0f}",
+                     f"{100 * f_exit / (f_exit + f_bb):.2f}%",
+                     f"{buf / 1024:.0f} KiB/sample"])
+    txt = table(
+        "Table II — EE overhead (exit path vs backbone; buffer = "
+        "conditional-buffer footprint)",
+        ["network", "exit-path work", "share of total", "buffer"], rows)
+    return {"text": txt}
+
+
+def main() -> None:
+    print(run()["text"])
+
+
+if __name__ == "__main__":
+    main()

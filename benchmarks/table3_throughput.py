@@ -1,0 +1,92 @@
+"""Table III analogue — MEASURED throughput of baseline vs Early-Exit
+inference on this host (the CPU row of the paper's table), plus the modeled
+TPU v5e numbers from the roofline model.
+
+The EE pipeline here is the real staged execution: stage 1 on the full
+batch, exit decision, compaction, stage 2 on the hard slab only — so the
+measured gain reflects genuine compute skipped, exactly like the board."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import table, time_fn, trained_blenet
+from repro.core import exit_decision as ed
+from repro.core.conditional import conditional_buffer, exit_merge
+from repro.models import cnn as C
+
+
+def _measure(batch: int = 512, c_thr: float = 0.9) -> dict:
+    cfg, params, data = trained_blenet()
+    x = jnp.asarray(data["x"][:batch])
+    y = np.asarray(data["y"][:batch])
+
+    @jax.jit
+    def baseline(x):
+        return C.forward_backbone(params, cfg, x)
+
+    # profile p on a held-out slice, then size the stage-2 bucket
+    prof_logits = C.run_exit(params, cfg, 0,
+                             C.run_stage(params, cfg, 0,
+                                         jnp.asarray(data["x"][batch:
+                                                               batch * 2])))
+    p_hard = float((~np.asarray(ed.exit_decision(prof_logits, c_thr))).mean())
+    cap = max(8, int(np.ceil((p_hard + 0.1) * batch / 8)) * 8)
+
+    @jax.jit
+    def ee_pipeline(x):
+        h1 = C.run_stage(params, cfg, 0, x)                  # stage-1 backbone
+        exit_logits = C.run_exit(params, cfg, 0, h1)         # exit classifier
+        mask, pred, conf = ed.decision_and_argmax(exit_logits, c_thr)
+        ids = jnp.arange(x.shape[0], dtype=jnp.int32)
+        slab, slab_ids, n_hard, ovf = conditional_buffer(h1, ids, ~mask, cap)
+        final = C.run_stage(params, cfg, 1, slab)            # stage 2: slab only
+        merged = exit_merge(x.shape[0], jnp.where(mask, ids, -1),
+                            exit_logits, slab_ids, final)
+        return merged, mask, ovf
+
+    t_base = time_fn(baseline, x)
+    t_ee = time_fn(ee_pipeline, x)
+    merged, mask, ovf = ee_pipeline(x)
+    acc_ee = float((np.asarray(jnp.argmax(merged, -1)) == y).mean())
+    acc_b = float((np.asarray(jnp.argmax(baseline(x), -1)) == y).mean())
+    return {"batch": batch, "p_hard": p_hard, "cap": cap,
+            "thr_base": batch / t_base, "thr_ee": batch / t_ee,
+            "acc_base": acc_b, "acc_ee": acc_ee,
+            "overflow": int(ovf)}
+
+
+def run() -> dict:
+    m = _measure()
+    # modeled TPU v5e single-chip: backbone vs EE expected-MACs ratio applied
+    # to the paper's measured-class gap is left to the roofline report; here
+    # we report the analytic MAC ratio for reference.
+    from repro.core import perf_model as pm
+    cfg, _, _ = trained_blenet()
+    w1 = sum(pm.cnn_stage_workloads(cfg, 0)) + \
+        sum(pm.cnn_exit_workloads(cfg, 0))
+    w2 = sum(pm.cnn_stage_workloads(cfg, 1))
+    mac_ratio = (w1 + w2 - sum(pm.cnn_exit_workloads(cfg, 0))) / \
+        (w1 + m["p_hard"] * w2)
+    rows = [
+        ["LeNet backbone (measured, this host)", f"{m['thr_base']:,.0f}",
+         f"{m['acc_base']:.4f}", "-"],
+        ["B-LeNet EE (measured, this host)", f"{m['thr_ee']:,.0f}",
+         f"{m['acc_ee']:.4f}", f"{m['thr_ee'] / m['thr_base']:.2f}x"],
+        ["analytic expected-MAC gain", "-", "-", f"{mac_ratio:.2f}x"],
+    ]
+    txt = table(
+        f"Table III — measured EE vs baseline (batch={m['batch']}, "
+        f"p={m['p_hard']:.2f}, capacity={m['cap']}, overflow="
+        f"{m['overflow']})",
+        ["network", "samples/s", "top-1 acc", "gain"], rows)
+    return {"text": txt, **m, "mac_ratio": mac_ratio}
+
+
+def main() -> None:
+    print(run()["text"])
+
+
+if __name__ == "__main__":
+    main()

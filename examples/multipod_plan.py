@@ -1,0 +1,51 @@
+"""Multi-pod deployment planning: run the ATHEENA LM optimizer for an
+assigned architecture, print the two-stage chip apportionment, and show the
+elastic-degradation replan (a pod loses 16 chips).
+
+    PYTHONPATH=src python examples/multipod_plan.py --arch qwen2-7b
+"""
+import argparse
+
+from repro.core import dse
+from repro.core.stage_mesh import StageMeshPlan
+from repro.models.registry import get_arch, list_archs
+from repro.runtime.elastic import replan
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen2-7b", choices=list_archs())
+ap.add_argument("--p", type=float, default=0.25)
+ap.add_argument("--chips", type=int, default=256)
+ap.add_argument("--seq", type=int, default=4096)
+ap.add_argument("--batch", type=int, default=256)
+args = ap.parse_args()
+
+cfg = get_arch(args.arch)
+k = cfg.default_exit_layers()[0]
+print(f"{args.arch}: exit after layer {k}/{cfg.n_layers}, p={args.p}, "
+      f"budget {args.chips} chips")
+
+design = dse.atheena_optimize_lm(cfg, k, args.p, kind="prefill",
+                                 seq_len=args.seq, batch=args.batch,
+                                 chips=args.chips)
+d = design.combined
+plan = StageMeshPlan.from_design(d)
+print(f"stage 1: {plan.chips1} chips (dp={plan.plan1.dp} tp={plan.plan1.tp} "
+      f"fsdp={plan.plan1.fsdp}) -> {d.stage1.throughput:,.0f} samples/s")
+print(f"stage 2: {plan.chips2} chips (dp={plan.plan2.dp} tp={plan.plan2.tp} "
+      f"fsdp={plan.plan2.fsdp}) -> {d.stage2.throughput:,.0f} samples/s "
+      f"(effective x1/p: {d.stage2.throughput / args.p:,.0f})")
+print(f"combined: {d.design_throughput:,.0f} samples/s = "
+      f"{design.gain_vs_baseline():.2f}x baseline at the same budget")
+print(f"robustness band: q=p-5% {d.throughput_at(args.p - 0.05):,.0f} | "
+      f"q=p {d.throughput_at(args.p):,.0f} | "
+      f"q=p+5% {d.throughput_at(args.p + 0.05):,.0f}")
+
+# --- elastic: lose 16 chips, replan from the same TAPs -----------------------
+ep = replan(design.tap1, design.tap2, args.p, chips_before=args.chips,
+            chips_after=args.chips - 16)
+if ep:
+    d2 = ep.design
+    print(f"\nafter losing 16 chips: stage1 {d2.stage1.resources[0]:.0f} + "
+          f"stage2 {d2.stage2.resources[0]:.0f} chips -> "
+          f"{ep.throughput_after:,.0f} samples/s "
+          f"({100 * ep.degradation:.1f}% of the healthy-mesh throughput)")

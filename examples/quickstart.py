@@ -1,0 +1,55 @@
+"""Quickstart: the whole ATHEENA toolflow in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Train the paper's B-LeNet (joint BranchyNet loss) on synthetic MNIST.
+2. Profile the early-exit probability p at a calibrated threshold.
+3. Run the ATHEENA optimizer: per-stage TAP curves + the Eq. (1) ⊕ merge.
+4. Report the combined design and its gain over the no-exit baseline.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import dse, exit_decision as ed, losses, profiler
+from repro.data.pipeline import mnist_like
+from repro.models import cnn as C
+
+# 1. train ------------------------------------------------------------------
+cfg = C.b_lenet()
+data = mnist_like(2048, seed=0, hard_frac=0.3)
+params = C.init_cnn(jax.random.PRNGKey(0), cfg)
+
+
+@jax.jit
+def step(p, x, y):
+    def loss_fn(p):
+        return losses.cnn_joint_loss(C.forward_all_exits(p, cfg, x), y,
+                                     (0.3, 1.0))[0]
+    return jax.tree.map(lambda a, g: a - 0.05 * g, p, jax.grad(loss_fn)(p))
+
+
+x, y = jnp.asarray(data["x"]), jnp.asarray(data["y"])
+for i in range(150):
+    lo = (i * 128) % 1920
+    params = step(params, x[lo:lo + 128], y[lo:lo + 128])
+
+# 2. profile ------------------------------------------------------------------
+outs = C.forward_all_exits(params, cfg, x)
+c_thr = ed.calibrate_threshold(ed.softmax_confidence(outs[0]),
+                               target_exit_rate=0.75)
+prof = profiler.profile_early_exit(outs[0], outs[-1], y, c_thr)
+print(f"profiled: p_hard={prof.p_hard:.2f}  EE acc={prof.cumulative_accuracy:.3f}"
+      f"  baseline acc={prof.baseline_accuracy:.3f}  (C_thr={c_thr:.3f})")
+
+# 3. + 4. optimize & report ----------------------------------------------------
+design = dse.atheena_optimize_cnn(cfg, p=prof.p_hard, budget=256, n_seeds=3)
+d = design.combined
+print(f"stage 1: {d.stage1.resources[0]:.0f} MAC units -> "
+      f"{d.stage1.throughput:,.0f} samples/s")
+print(f"stage 2: {d.stage2.resources[0]:.0f} MAC units -> "
+      f"{d.stage2.throughput:,.0f} samples/s (x1/p = "
+      f"{d.stage2.throughput / design.p:,.0f} effective)")
+print(f"combined design throughput {d.design_throughput:,.0f} samples/s = "
+      f"{design.gain_vs_baseline():.2f}x the no-exit baseline")
+print(f"robustness: q=20% -> {d.throughput_at(0.20):,.0f}, q=30% -> "
+      f"{d.throughput_at(0.30):,.0f} samples/s")

@@ -1,0 +1,4 @@
+"""--arch deepseek-v2-lite-16b (see configs/archs.py for the full definition)."""
+from repro.configs.archs import DEEPSEEK_V2_LITE as CONFIG, smoke_config
+
+SMOKE = smoke_config(CONFIG)

@@ -1,0 +1,4 @@
+"""--arch grok-1-314b (see configs/archs.py for the full definition)."""
+from repro.configs.archs import GROK_1_314B as CONFIG, smoke_config
+
+SMOKE = smoke_config(CONFIG)

@@ -1,0 +1,4 @@
+"""--arch internvl2-2b (see configs/archs.py for the full definition)."""
+from repro.configs.archs import INTERNVL2_2B as CONFIG, smoke_config
+
+SMOKE = smoke_config(CONFIG)

@@ -1,0 +1,4 @@
+"""--arch mamba2-130m (see configs/archs.py for the full definition)."""
+from repro.configs.archs import MAMBA2_130M as CONFIG, smoke_config
+
+SMOKE = smoke_config(CONFIG)

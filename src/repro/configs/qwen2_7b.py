@@ -1,0 +1,4 @@
+"""--arch qwen2-7b (see configs/archs.py for the full definition)."""
+from repro.configs.archs import QWEN2_7B as CONFIG, smoke_config
+
+SMOKE = smoke_config(CONFIG)

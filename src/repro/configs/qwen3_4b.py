@@ -1,0 +1,4 @@
+"""--arch qwen3-4b (see configs/archs.py for the full definition)."""
+from repro.configs.archs import QWEN3_4B as CONFIG, smoke_config
+
+SMOKE = smoke_config(CONFIG)

@@ -1,0 +1,4 @@
+"""--arch recurrentgemma-9b (see configs/archs.py for the full definition)."""
+from repro.configs.archs import RECURRENTGEMMA_9B as CONFIG, smoke_config
+
+SMOKE = smoke_config(CONFIG)

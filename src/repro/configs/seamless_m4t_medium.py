@@ -1,0 +1,4 @@
+"""--arch seamless-m4t-medium (see configs/archs.py for the full definition)."""
+from repro.configs.archs import SEAMLESS_M4T_MEDIUM as CONFIG, smoke_config
+
+SMOKE = smoke_config(CONFIG)

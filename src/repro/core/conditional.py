@@ -1,0 +1,143 @@
+"""Conditional Buffer / Split / Exit Merge — paper §III-C.2-4, TPU-native.
+
+The FPGA conditional buffer holds a sample's intermediate feature map while
+the exit decision is computed, then either drops it (single-cycle address
+invalidation) or streams it to stage 2. On TPU the equivalent is a static-
+shaped **compaction**: a stable prefix-sum partition that moves hard samples
+(exit_mask == False) to the front, plus the Sample-ID tags the paper threads
+through the pipeline so out-of-order completions can be merged.
+
+The queue simulator at the bottom models the buffer occupancy / stall
+behaviour (paper Fig. 7 deadlock-avoidance sizing and the Fig. 4 q-vs-p
+robustness band) for the serving runtime.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def compact_indices(hard_mask: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stable partition: indices of hard samples first, then easy.
+
+    hard_mask: (B,) bool. Returns (perm (B,) int32, n_hard () int32) where
+    perm[:n_hard] are hard-sample indices in original order.
+    """
+    b = hard_mask.shape[0]
+    hard = hard_mask.astype(jnp.int32)
+    pos_hard = jnp.cumsum(hard) - 1                     # slot among hard
+    pos_easy = jnp.cumsum(1 - hard) - 1                 # slot among easy
+    n_hard = jnp.sum(hard)
+    slot = jnp.where(hard_mask, pos_hard, n_hard + pos_easy)
+    perm = jnp.zeros((b,), jnp.int32).at[slot].set(jnp.arange(b, dtype=jnp.int32))
+    return perm, n_hard
+
+
+def conditional_buffer(hidden, sample_ids, hard_mask, capacity: int):
+    """The Conditional Buffer: keep hard samples, emit a fixed-size slab.
+
+    hidden: (B, ...) stage-1 intermediate activations (pytree ok)
+    sample_ids: (B,) int32 tags; hard_mask: (B,) bool.
+    capacity: stage-2 bucket size (static; = ceil(p*B) rounded for sharding).
+
+    Returns (slab_hidden (capacity, ...), slab_ids (capacity,), n_hard, overflow)
+    — slots beyond n_hard carry the *flush* id -1 (the paper flushes the
+    stage-2 pipeline with an unused Sample ID to avoid deadlock); overflow
+    counts hard samples dropped to the retry queue when n_hard > capacity.
+    """
+    perm, n_hard = compact_indices(hard_mask)
+    take = perm[:capacity]
+    valid = jnp.arange(capacity) < jnp.minimum(n_hard, capacity)
+    slab = jax.tree.map(lambda x: jnp.take(x, take, axis=0), hidden)
+    slab_ids = jnp.where(valid, jnp.take(sample_ids, take), -1)
+    overflow = jnp.maximum(n_hard - capacity, 0)
+    return slab, slab_ids, n_hard, overflow
+
+
+def split_stream(x):
+    """Split layer: duplicate the stream at a branch point. Under XLA this is
+    free (no copy until divergent writes); kept explicit for graph parity
+    with the paper's CDFG."""
+    return x, x
+
+
+def exit_merge(batch: int, easy_ids, easy_vals, hard_ids, hard_vals,
+               fill_value=0):
+    """Exit Merge: coherently merge out-of-order exit streams by Sample ID.
+
+    easy_ids: (B,) int32 with -1 for non-exited slots; easy_vals: (B, ...)
+    hard_ids: (C,) int32 with -1 for flush slots;      hard_vals: (C, ...)
+    Returns merged (batch, ...) ordered by sample id.
+    """
+    def scat(ids, vals, out):
+        safe = jnp.where(ids >= 0, ids, batch)          # flush ids -> scratch row
+        padded = jnp.concatenate([out, out[:1]], axis=0)
+        padded = padded.at[safe].set(vals)
+        return padded[:batch]
+
+    shape = (batch,) + easy_vals.shape[1:]
+    out = jnp.full(shape, fill_value, easy_vals.dtype)
+    out = scat(easy_ids, easy_vals, out)
+    out = scat(hard_ids, hard_vals, out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# buffer sizing + queue model (paper Fig. 7 / Fig. 4 robustness)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BufferSpec:
+    """Minimum conditional-buffer depth to avoid a stall (Fig. 7): the buffer
+    must hold the samples in flight while the exit path (exit layers +
+    decision) evaluates, plus slack for q-vs-p variance."""
+    decision_latency_samples: float   # exit-path latency / stage-1 sample period
+    q_slack: float = 0.10             # tolerated (q - p) before stalling
+
+    def min_depth(self, batch: int, p: float) -> int:
+        inflight = int(np.ceil(self.decision_latency_samples))
+        variance = int(np.ceil(self.q_slack * batch))
+        return inflight + variance
+
+
+def simulate_two_stage_queue(hard_seq: np.ndarray, *, stage1_rate: float,
+                             stage2_rate: float, buffer_depth: int
+                             ) -> dict:
+    """Discrete-event model of the two-stage pipeline on a 0/1 hard-sample
+    sequence. Returns achieved throughput + stall statistics. Used by tests
+    and the Fig. 4 robustness benchmark (no hardware needed).
+
+    stage1_rate / stage2_rate: samples per unit time each stage can absorb.
+    """
+    t1 = 1.0 / stage1_rate
+    t2 = 1.0 / stage2_rate
+    n = len(hard_seq)
+    stage1_free = 0.0
+    stage2_free = 0.0
+    queue = []          # completion times of stage-1 output awaiting stage 2
+    stalls = 0
+    done = 0.0
+    for i, hard in enumerate(hard_seq):
+        start = max(stage1_free, 0.0)
+        # backpressure: if the buffer is full, stage 1 stalls until a slot frees
+        while len(queue) >= buffer_depth:
+            t = queue.pop(0)
+            stage2_free = max(stage2_free, t) + t2
+            stalls += 1
+        stage1_free = start + t1
+        if hard:
+            queue.append(stage1_free)
+        done = max(done, stage1_free)
+    while queue:
+        t = queue.pop(0)
+        stage2_free = max(stage2_free, t) + t2
+    done = max(done, stage2_free)
+    return {
+        "throughput": n / done if done > 0 else float("inf"),
+        "stalls": stalls,
+        "makespan": done,
+    }

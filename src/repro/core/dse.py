@@ -1,0 +1,234 @@
+"""Design Space Exploration — simulated annealing, as in fpgaConvNet/ATHEENA.
+
+The paper's optimizer proposes incremental transformations to hardware blocks
+(folding factors), scores them with the resource/performance model, and
+anneals. Here the two search spaces are:
+
+- CNN folding vectors (parallelism per pipeline layer) under a MAC-unit
+  budget — used for the paper's own networks;
+- LM sharding plans (dp/tp/fsdp/microbatch) under a chip budget — used for
+  the assigned architectures.
+
+``atheena_optimize`` is the top-level flow of Fig. 5: profile p -> per-stage
+TAP (via DSE under scaled budgets) -> Eq. (1) combination -> stage designs.
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core import perf_model as pm
+from repro.core.tap import CombinedDesign, DesignPoint, TAPFunction, combine
+from repro.models.cnn import CNNConfig
+from repro.models.config import ArchConfig
+
+
+# ---------------------------------------------------------------------------
+# generic simulated annealing
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SAResult:
+    best_state: object
+    best_score: float
+    trace: List[float]
+
+
+def simulated_annealing(init_state, score: Callable, neighbour: Callable, *,
+                        iters: int = 2000, t0: float = 1.0, t1: float = 1e-3,
+                        seed: int = 0) -> SAResult:
+    """Maximise score. Standard geometric-cooling SA."""
+    rng = random.Random(seed)
+    state = init_state
+    s = score(state)
+    best, best_s = state, s
+    trace = [s]
+    alpha = (t1 / t0) ** (1.0 / max(iters - 1, 1))
+    t = t0
+    for _ in range(iters):
+        cand = neighbour(state, rng)
+        cs = score(cand)
+        if cs >= s or rng.random() < math.exp((cs - s) / max(t, 1e-12)):
+            state, s = cand, cs
+            if s > best_s:
+                best, best_s = state, s
+        t *= alpha
+        trace.append(best_s)
+    return SAResult(best_state=best, best_score=best_s, trace=trace)
+
+
+# ---------------------------------------------------------------------------
+# CNN folding DSE
+# ---------------------------------------------------------------------------
+
+FOLD_LEVELS = [1 << i for i in range(11)]
+
+
+def cnn_folding_dse(workloads: Sequence[float], budget: int, *, iters: int = 1500,
+                    seed: int = 0) -> Tuple[List[int], float]:
+    """SA over per-layer folding levels; score = pipeline rate, infeasible
+    (over budget) states scored by soft penalty. Matches the paper's
+    'run ten times, keep the best' usage when called with multiple seeds."""
+    n = len(workloads)
+
+    def clamp(state):
+        return [max(1, min(p, FOLD_LEVELS[-1])) for p in state]
+
+    def score(state):
+        used = sum(state)
+        thr = pm.pipeline_rate(workloads, state)
+        if used > budget:
+            return thr * (budget / used) ** 4      # soft penalty
+        return thr
+
+    def neighbour(state, rng):
+        s = list(state)
+        i = rng.randrange(n)
+        li = FOLD_LEVELS.index(s[i])
+        li = max(0, min(len(FOLD_LEVELS) - 1, li + rng.choice([-1, 1])))
+        s[i] = FOLD_LEVELS[li]
+        return clamp(s)
+
+    init = pm.optimal_folding(workloads, budget)
+    res = simulated_annealing(init, score, neighbour, iters=iters, seed=seed)
+    state = res.best_state
+    if sum(state) > budget:                        # repair: fold down smallest II slack
+        state = pm.optimal_folding(workloads, budget)
+    return list(state), pm.pipeline_rate(workloads, state)
+
+
+def cnn_tap_sa(workloads: Sequence[float], budgets: Sequence[int], *,
+               n_seeds: int = 10, name: str = "",
+               bram_per_unit: float = 0.25) -> TAPFunction:
+    """Paper §IV-A: optimizers run ten times per budget, best points kept."""
+    pts = []
+    for b in budgets:
+        best: Optional[Tuple[List[int], float]] = None
+        for s in range(n_seeds):
+            alloc, thr = cnn_folding_dse(workloads, b, seed=s)
+            if best is None or thr > best[1]:
+                best = (alloc, thr)
+        alloc, thr = best
+        used = sum(alloc)
+        pts.append(DesignPoint(resources=(used, used * bram_per_unit),
+                               throughput=thr,
+                               meta={"folding": tuple(alloc), "budget": b}))
+    return TAPFunction(pts, name=name)
+
+
+# ---------------------------------------------------------------------------
+# LM sharding DSE
+# ---------------------------------------------------------------------------
+
+def lm_sharding_dse(cfg: ArchConfig, lo: int, hi: int, *, kind: str,
+                    seq_len: int, batch: int, chips: int,
+                    iters: int = 300, seed: int = 0) -> Optional[Dict]:
+    """SA over (tp, fsdp) for a fixed chip count (dp = chips/tp).
+    Small space — SA kept for parity with the toolflow; exhaustive check
+    confirms optimality in tests."""
+    tps = [t for t in [1, 2, 4, 8, 16, 32] if t <= chips and chips % t == 0]
+
+    def mk(tp, fsdp):
+        return pm.ShardPlan(dp=chips // tp, tp=tp, fsdp=fsdp)
+
+    def score(state):
+        tp, fsdp = state
+        r = pm.stage_roofline(cfg, lo, hi, kind=kind, seq_len=seq_len,
+                              batch=batch, plan=mk(tp, fsdp))
+        return r["throughput"] if r["feasible"] else r["throughput"] * 1e-3
+
+    def neighbour(state, rng):
+        tp, fsdp = state
+        if rng.random() < 0.5:
+            tp = rng.choice(tps)
+        else:
+            fsdp = not fsdp
+        return (tp, fsdp)
+
+    res = simulated_annealing((tps[0], False), score, neighbour,
+                              iters=iters, seed=seed)
+    tp, fsdp = res.best_state
+    plan = mk(tp, fsdp)
+    r = pm.stage_roofline(cfg, lo, hi, kind=kind, seq_len=seq_len, batch=batch,
+                          plan=plan)
+    if not r["feasible"]:
+        return None
+    return {"plan": plan, "roofline": r}
+
+
+def lm_stage_tap_sa(cfg: ArchConfig, lo: int, hi: int, *, kind: str,
+                    seq_len: int, batch: int, chip_budgets: Sequence[int],
+                    name: str = "") -> TAPFunction:
+    pts = []
+    for n in chip_budgets:
+        best = lm_sharding_dse(cfg, lo, hi, kind=kind, seq_len=seq_len,
+                               batch=batch, chips=n)
+        if best:
+            r = best["roofline"]
+            pts.append(DesignPoint(resources=(n, r["hbm_gb_per_chip"] * n),
+                                   throughput=r["throughput"],
+                                   meta=best))
+    return TAPFunction(pts, name=name)
+
+
+# ---------------------------------------------------------------------------
+# the ATHEENA optimizer (Fig. 5 flow)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class AtheenaDesign:
+    combined: CombinedDesign
+    tap1: TAPFunction
+    tap2: TAPFunction
+    baseline: TAPFunction
+    p: float
+
+    def gain_vs_baseline(self) -> float:
+        base = self.baseline.query(self.combined.resources)
+        if base is None:
+            base = max(self.baseline.points, key=lambda d: d.throughput)
+        return self.combined.design_throughput / base.throughput
+
+
+def atheena_optimize_cnn(cfg: CNNConfig, p: float, budget: int, *,
+                         budgets: Optional[Sequence[int]] = None,
+                         n_seeds: int = 10) -> AtheenaDesign:
+    """Two-stage EE CNN: stage 1 = backbone stage 0 + exit-1 layers (must run
+    at full rate), stage 2 = backbone stage 1 (rate scaled by 1/p)."""
+    if budgets is None:
+        budgets = sorted({max(2, int(budget * f))
+                          for f in (0.05, 0.1, 0.15, 0.2, 0.3, 0.4, 0.5,
+                                    0.6, 0.7, 0.8, 0.9, 1.0)})
+    w1 = pm.cnn_stage_workloads(cfg, 0) + pm.cnn_exit_workloads(cfg, 0)
+    w2 = pm.cnn_stage_workloads(cfg, 1)
+    wb = pm.cnn_stage_workloads(cfg, 0) + pm.cnn_stage_workloads(cfg, 1)
+    tap1 = cnn_tap_sa(w1, budgets, n_seeds=n_seeds, name="stage1")
+    tap2 = cnn_tap_sa(w2, budgets, n_seeds=n_seeds, name="stage2")
+    base = cnn_tap_sa(wb, budgets, n_seeds=n_seeds, name="baseline")
+    comb = combine(tap1, tap2, p, budget=(budget, budget * 0.6))
+    if comb is None:
+        raise RuntimeError("no feasible combined design within budget")
+    return AtheenaDesign(combined=comb, tap1=tap1, tap2=tap2, baseline=base, p=p)
+
+
+def atheena_optimize_lm(cfg: ArchConfig, exit_layer: int, p: float, *,
+                        kind: str, seq_len: int, batch: int, chips: int,
+                        chip_budgets: Optional[Sequence[int]] = None
+                        ) -> AtheenaDesign:
+    """Two-stage EE LM serving design over a chip budget."""
+    if chip_budgets is None:
+        chip_budgets = [c for c in (4, 8, 16, 32, 48, 64, 96, 128, 192, 224, 256)
+                        if c <= chips]
+    tap1 = lm_stage_tap_sa(cfg, 0, exit_layer, kind=kind, seq_len=seq_len,
+                           batch=batch, chip_budgets=chip_budgets, name="stage1")
+    tap2 = lm_stage_tap_sa(cfg, exit_layer, cfg.n_layers, kind=kind,
+                           seq_len=seq_len, batch=batch,
+                           chip_budgets=chip_budgets, name="stage2")
+    base = lm_stage_tap_sa(cfg, 0, cfg.n_layers, kind=kind, seq_len=seq_len,
+                           batch=batch, chip_budgets=chip_budgets, name="baseline")
+    comb = combine(tap1, tap2, p, budget=(chips, chips * pm.HBM_GB))
+    if comb is None:
+        raise RuntimeError("no feasible combined design within chip budget")
+    return AtheenaDesign(combined=comb, tap1=tap1, tap2=tap2, baseline=base, p=p)

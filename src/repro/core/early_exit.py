@@ -1,0 +1,214 @@
+"""EarlyExitModel: stage partitioning + exit heads for LM backbones.
+
+Wraps any registry backbone (models/transformer.py) with depth early exits
+(ATHEENA's CDFG form, Fig. 3): stage 1 = embed + layers [0, k) + exit head,
+stage 2 = layers [k, N) + final head. The exit head is RMSNorm + tied
+unembedding (the LM analogue of BranchyNet's lightweight exit classifier).
+
+The staged entry points mirror the hardware: `stage1_*` produce intermediate
+hidden states + exit logits; the exit decision + conditional buffer
+(core/conditional.py) filter samples; `stage2_*` finish the hard ones.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import conditional as cond
+from repro.core import exit_decision as ed
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+from repro.models.layers import init_rmsnorm, rmsnorm, unembed
+
+
+@dataclass(frozen=True)
+class EarlyExitSpec:
+    exit_layer: int            # stage boundary k (superblock-aligned)
+    c_thr: float = 0.9         # Eq. (2) confidence threshold
+    loss_weights: Tuple[float, float] = (0.3, 1.0)   # (exit, final) — BranchyNet
+
+
+def default_spec(cfg: ArchConfig, c_thr: float = 0.9) -> EarlyExitSpec:
+    return EarlyExitSpec(exit_layer=cfg.default_exit_layers()[0], c_thr=c_thr)
+
+
+def validate_boundary(cfg: ArchConfig, k: int) -> None:
+    base = cfg.first_k_dense
+    if not (base <= k <= cfg.n_layers):
+        raise ValueError(f"exit layer {k} outside [{base}, {cfg.n_layers}]")
+    if (k - base) % cfg.pattern_len != 0:
+        raise ValueError(
+            f"exit layer {k} must be superblock-aligned (pattern len "
+            f"{cfg.pattern_len}, leading dense {base})")
+
+
+def init_ee_params(key, cfg: ArchConfig, spec: EarlyExitSpec) -> dict:
+    validate_boundary(cfg, spec.exit_layer)
+    k1, k2 = jax.random.split(key)
+    return {
+        "backbone": T.init_params(k1, cfg),
+        "exit_head": {"norm": init_rmsnorm(cfg.d_model, cfg.p_dtype())},
+    }
+
+
+def ee_param_shapes(cfg: ArchConfig, spec: EarlyExitSpec):
+    return jax.eval_shape(lambda k: init_ee_params(k, cfg, spec),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def exit_head(params, cfg: ArchConfig, h):
+    """Exit classifier: norm + tied unembed -> fp32 logits."""
+    hn = rmsnorm(params["exit_head"]["norm"], h, cfg.norm_eps)
+    bb = params["backbone"]
+    if cfg.tie_embeddings or "head" not in bb:
+        return unembed(bb["embed"], hn)
+    return jnp.einsum("...d,dv->...v", hn.astype(jnp.float32),
+                      bb["head"].astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# training: all exits computed for every sample (joint loss)
+# ---------------------------------------------------------------------------
+
+def forward_train(params, cfg: ArchConfig, spec: EarlyExitSpec, tokens, *,
+                  frontend_embeds=None):
+    """Returns (exit_hidden, final_hidden, aux): hidden states before each
+    head so the loss can chunk the unembedding over sequence."""
+    bb = params["backbone"]
+    memory = None
+    if cfg.encdec:
+        memory = T.encode(bb, cfg, frontend_embeds)
+        frontend_embeds = None
+    h = T.embed_tokens(bb, cfg, tokens, frontend_embeds)
+    h, _, aux1 = T.run_layers(bb, cfg, h, 0, spec.exit_layer, mode="train",
+                              memory=memory)
+    exit_hidden = rmsnorm(params["exit_head"]["norm"], h, cfg.norm_eps)
+    h, _, aux2 = T.run_layers(bb, cfg, h, spec.exit_layer, cfg.n_layers,
+                              mode="train", memory=memory)
+    final_hidden = rmsnorm(bb["final_norm"], h, cfg.norm_eps)
+    return exit_hidden, final_hidden, aux1 + aux2
+
+
+# ---------------------------------------------------------------------------
+# serving: staged execution (the hardware mapping)
+# ---------------------------------------------------------------------------
+
+def stage1_prefill(params, cfg: ArchConfig, spec: EarlyExitSpec, tokens, *,
+                   frontend_embeds=None):
+    """Stage 1: embed + layers [0,k) + exit head on the last position.
+    Returns (hidden (B,S,d), caches_seg1, exit_logits (B,V), memory)."""
+    bb = params["backbone"]
+    memory = None
+    if cfg.encdec:
+        memory = T.encode(bb, cfg, frontend_embeds)
+        frontend_embeds = None
+    h = T.embed_tokens(bb, cfg, tokens, frontend_embeds)
+    h, caches, _ = T.run_layers(bb, cfg, h, 0, spec.exit_layer, mode="prefill",
+                                memory=memory)
+    logits = exit_head(params, cfg, h[:, -1])
+    return h, caches, logits, memory
+
+
+def stage2_prefill(params, cfg: ArchConfig, spec: EarlyExitSpec, h, *,
+                   memory=None):
+    """Stage 2: layers [k,N) + final head on hard samples only.
+    h: (C, S, d) compacted slab. Returns (logits (C,V), caches_seg2)."""
+    bb = params["backbone"]
+    h, caches, _ = T.run_layers(bb, cfg, h, spec.exit_layer, cfg.n_layers,
+                                mode="prefill", memory=memory)
+    return T.head(bb, cfg, h[:, -1]), caches
+
+
+def stage1_decode(params, cfg: ArchConfig, spec: EarlyExitSpec, token, caches,
+                  step):
+    """One-token stage 1. Returns (hidden (B,1,d), new_caches, exit_logits)."""
+    bb = params["backbone"]
+    h = T.embed_tokens(bb, cfg, token)
+    h, ncaches, _ = T.run_layers(bb, cfg, h, 0, spec.exit_layer, mode="decode",
+                                 caches=caches, step=step)
+    return h, ncaches, exit_head(params, cfg, h[:, 0])
+
+
+def stage2_decode(params, cfg: ArchConfig, spec: EarlyExitSpec, h, caches,
+                  step, *, presliced: bool = True):
+    """One-token stage 2 on the compacted hard slab. ``caches`` is the
+    stage-2 SEGMENT cache (ee.split_caches) by default — its bucket batch
+    size differs from stage 1's, so the pytrees cannot be shared."""
+    bb = params["backbone"]
+    base = ((spec.exit_layer - cfg.first_k_dense) // cfg.pattern_len
+            if presliced else 0)
+    h, ncaches, _ = T.run_layers(bb, cfg, h, spec.exit_layer, cfg.n_layers,
+                                 mode="decode", caches=caches, step=step,
+                                 cache_base_sb=base)
+    return T.head(bb, cfg, h[:, 0]), ncaches
+
+
+def _slice0(x, lo: int, hi: Optional[int]):
+    """Slice axis 0 of an array OR a ShapeDtypeStruct (dry-run shapes)."""
+    if isinstance(x, jax.ShapeDtypeStruct):
+        n = x.shape[0]
+        stop = n if hi is None else hi
+        return jax.ShapeDtypeStruct((max(stop - lo, 0),) + x.shape[1:],
+                                    x.dtype)
+    return x[lo:] if hi is None else x[lo:hi]
+
+
+def split_caches(cfg: ArchConfig, spec: EarlyExitSpec, caches):
+    """Slice a full-depth cache pytree into (stage1, stage2) segments,
+    mirroring run_layers' superblock slicing. Works on arrays and on
+    ShapeDtypeStruct stand-ins (the dry-run path)."""
+    pl = cfg.pattern_len
+    k_super = (spec.exit_layer - cfg.first_k_dense) // pl
+    s1 = {
+        "first": caches["first"],
+        "blocks": jax.tree.map(lambda x: _slice0(x, 0, k_super),
+                               caches["blocks"]),
+        "rem": [],
+    }
+    s2 = {
+        "first": [],
+        "blocks": jax.tree.map(lambda x: _slice0(x, k_super, None),
+                               caches["blocks"]),
+        "rem": caches["rem"],
+    }
+    return s1, s2
+
+
+# ---------------------------------------------------------------------------
+# one-shot batched EE inference (classification-style; used by the profiler
+# and the CPU-measurable throughput benchmark)
+# ---------------------------------------------------------------------------
+
+def serve_batch(params, cfg: ArchConfig, spec: EarlyExitSpec, tokens, *,
+                capacity: Optional[int] = None, frontend_embeds=None):
+    """Full EE pipeline on one batch (prefill-style): stage 1 for all, exit
+    decision, conditional buffer compaction, stage 2 for the hard slab, exit
+    merge by sample id. Returns dict with merged last-token logits, the exit
+    mask, and occupancy stats."""
+    B = tokens.shape[0]
+    sample_ids = jnp.arange(B, dtype=jnp.int32)
+    h, _, exit_logits, memory = stage1_prefill(params, cfg, spec, tokens,
+                                               frontend_embeds=frontend_embeds)
+    exit_mask, pred, conf = ed.decision_and_argmax(exit_logits, spec.c_thr)
+    hard_mask = ~exit_mask
+    cap = capacity if capacity is not None else B
+    slab, slab_ids, n_hard, overflow = cond.conditional_buffer(
+        h, sample_ids, hard_mask, cap)
+    mem_slab = None
+    if memory is not None:
+        mem_slab, _, _, _ = cond.conditional_buffer(memory, sample_ids,
+                                                    hard_mask, cap)
+    final_logits, _ = stage2_prefill(params, cfg, spec, slab, memory=mem_slab)
+    easy_ids = jnp.where(exit_mask, sample_ids, -1)
+    merged = cond.exit_merge(B, easy_ids, exit_logits, slab_ids, final_logits)
+    return {
+        "logits": merged,
+        "exit_mask": exit_mask,
+        "exit_logits": exit_logits,
+        "confidence": conf,
+        "n_hard": n_hard,
+        "overflow": overflow,
+    }

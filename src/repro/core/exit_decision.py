@@ -1,0 +1,76 @@
+"""Exit (Softmax) Decision layer — paper §III-C.1, Eqs. (2)-(4).
+
+An early exit occurs when  max_i [Softmax(x)]_i > C_thr  (Eq. 2). The paper
+removes the Softmax division (Eq. 4):
+
+    max_i exp(x_i) > C_thr * sum_j exp(x_j)
+
+On TPU we additionally shift by the row max m = max_j x_j, under which the
+left side becomes exp(0) = 1, so the whole decision collapses to ONE fused
+online reduction:
+
+    1 > C_thr * sum_j exp(x_j - m)            (division-free AND stable)
+
+i.e. the decision needs only (m, sum-exp) — the same (m, l) pair flash
+attention tracks — and never materializes the softmax. The Pallas kernel in
+kernels/exit_decision implements exactly this; this module is the framework-
+level API and the jnp reference used everywhere off the hot path.
+
+The entropy criterion (BranchyNet's default) is also provided for parity
+with the literature; ATHEENA itself uses max-softmax.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_confidence(logits: jnp.ndarray) -> jnp.ndarray:
+    """max_i softmax(x)_i per row, computed stably. logits: (..., C)."""
+    x = logits.astype(jnp.float32)
+    m = jnp.max(x, axis=-1)
+    s = jnp.sum(jnp.exp(x - m[..., None]), axis=-1)
+    return 1.0 / s          # max softmax prob == exp(0)/sum == 1/s
+
+
+def exit_decision(logits: jnp.ndarray, c_thr: float) -> jnp.ndarray:
+    """Eq. (4), division-free and max-shifted: 1 > C_thr * sum exp(x - m).
+    Returns bool (...,) — True means the sample exits early."""
+    x = logits.astype(jnp.float32)
+    m = jnp.max(x, axis=-1)
+    s = jnp.sum(jnp.exp(x - m[..., None]), axis=-1)
+    return 1.0 > c_thr * s
+
+
+def entropy_confidence(logits: jnp.ndarray) -> jnp.ndarray:
+    """Normalized entropy in [0,1] (0 = certain). BranchyNet's criterion."""
+    x = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(x, axis=-1)
+    ent = -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+    return ent / jnp.log(jnp.float32(x.shape[-1]))
+
+
+def exit_decision_entropy(logits: jnp.ndarray, e_thr: float) -> jnp.ndarray:
+    return entropy_confidence(logits) < e_thr
+
+
+def decision_and_argmax(logits: jnp.ndarray, c_thr: float
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(exit_mask bool, predicted class int32, confidence fp32) in one pass.
+    This is the fused triple the hardware layer produces."""
+    x = logits.astype(jnp.float32)
+    m = jnp.max(x, axis=-1)
+    s = jnp.sum(jnp.exp(x - m[..., None]), axis=-1)
+    conf = 1.0 / s
+    pred = jnp.argmax(x, axis=-1).astype(jnp.int32)
+    return conf > c_thr, pred, conf
+
+
+def calibrate_threshold(confidences: jnp.ndarray, target_exit_rate: float) -> float:
+    """Pick C_thr so that a ``target_exit_rate`` fraction of the profiling
+    set exits early (paper: 'C_thr determined after training prior to exit
+    profiling'). confidences: (N,) stage-1 max-softmax values."""
+    q = jnp.quantile(confidences.astype(jnp.float32), 1.0 - target_exit_rate)
+    return float(q)

@@ -1,0 +1,178 @@
+"""Losses: sequence-chunked cross entropy, vocab-parallel (Megatron-style)
+cross entropy for TP meshes, and the BranchyNet joint EE loss."""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import hints
+from repro.models.config import ArchConfig
+from repro.models.layers import unembed
+
+
+def _logits_chunk(params_bb, cfg: ArchConfig, h_chunk):
+    if cfg.tie_embeddings or "head" not in params_bb:
+        return unembed(params_bb["embed"], h_chunk)
+    return jnp.einsum("...d,dv->...v", h_chunk.astype(jnp.float32),
+                      params_bb["head"].astype(jnp.float32))
+
+
+def chunked_ce(params_bb, cfg: ArchConfig, hidden, labels, mask=None,
+               chunk: int = 512) -> jnp.ndarray:
+    """Cross entropy without materializing (B, S, V): scan over sequence
+    chunks, unembedding one chunk at a time. hidden must already be
+    normalised (final/exit norm applied). labels: (B, S) int32; mask: (B, S)
+    1.0 where the position counts."""
+    B, S, _ = hidden.shape
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad))) if mask is not None else \
+            jnp.pad(jnp.ones((B, S), jnp.float32), ((0, 0), (0, pad)))
+    elif mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    nc = hidden.shape[1] // chunk
+    hs = hidden.reshape(B, nc, chunk, -1).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+    ms = mask.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h_c, l_c, m_c = xs
+        logits = _logits_chunk(params_bb, cfg, h_c)           # (B, chunk, V) fp32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l_c[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * m_c
+        return (tot + jnp.sum(nll), cnt + jnp.sum(m_c)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)),
+                                 (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _vp_applicable(cfg: ArchConfig) -> bool:
+    """Vocab-parallel CE applies when the ambient mesh has a model axis
+    that divides the vocab and the unembedding is the tied table (the
+    sharding planner puts the table's vocab dim on 'model' exactly then)."""
+    mesh = hints.mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return False
+    m = mesh.shape["model"]
+    return m > 1 and cfg.vocab % m == 0
+
+
+@jax.custom_jvp
+def _pmax_model_sg(x):
+    """pmax over 'model' with stop-gradient semantics (pmax has no JVP rule;
+    the softmax max-shift must not carry gradient anyway)."""
+    return jax.lax.pmax(x, axis_name="model")
+
+
+@_pmax_model_sg.defjvp
+def _pmax_model_sg_jvp(primals, tangents):
+    (x,) = primals
+    return _pmax_model_sg(x), jnp.zeros_like(x)
+
+
+def vocab_parallel_ce(params_bb, cfg: ArchConfig, hidden, labels, mask=None,
+                      chunk: int = 512) -> jnp.ndarray:
+    """Megatron-style TP cross entropy: each model-rank unembeds its OWN
+    vocab shard; the softmax statistics (running max, sum-exp, gold logit)
+    are combined with two tiny collectives per sequence chunk instead of
+    materializing (B, S, V) logits or resharding hidden per chunk.
+
+    hidden: (B, S, d) pre-normalised; table sharded P('model', None)."""
+    mesh = hints.mesh()
+    m = mesh.shape["model"]
+    table = params_bb["embed"]["table"]
+    B, S, _ = hidden.shape
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    baxes = hints.batch_axes()
+    nb = 1
+    for a in baxes:
+        nb *= mesh.shape[a]
+    bspec = baxes if (baxes and B % nb == 0) else None
+    v_loc = cfg.vocab // m
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+
+    def body(h, y, w, tbl):
+        r = jax.lax.axis_index("model")
+        if pad:
+            h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+            y = jnp.pad(y, ((0, 0), (0, pad)))
+            w = jnp.pad(w, ((0, 0), (0, pad)))
+        nc = h.shape[1] // chunk
+        hs = h.reshape(h.shape[0], nc, chunk, -1).transpose(1, 0, 2, 3)
+        ys = y.reshape(y.shape[0], nc, chunk).transpose(1, 0, 2)
+        ws = w.reshape(w.shape[0], nc, chunk).transpose(1, 0, 2)
+
+        def step(carry, xs):
+            tot, cnt = carry
+            h_c, y_c, w_c = xs
+            lg = jnp.einsum("bsd,vd->bsv", h_c.astype(jnp.float32),
+                            tbl.astype(jnp.float32))      # (b, chunk, v_loc)
+            m_loc = jnp.max(lg, axis=-1)
+            m_glob = _pmax_model_sg(jax.lax.stop_gradient(m_loc))
+            s_loc = jnp.sum(jnp.exp(lg - m_glob[..., None]), axis=-1)
+            s_glob = jax.lax.psum(s_loc, axis_name="model")
+            y_rel = y_c - r * v_loc
+            in_rng = (y_rel >= 0) & (y_rel < v_loc)
+            gold_loc = jnp.take_along_axis(
+                lg, jnp.clip(y_rel, 0, v_loc - 1)[..., None], axis=-1)[..., 0]
+            gold = jax.lax.psum(jnp.where(in_rng, gold_loc, 0.0),
+                                axis_name="model")
+            nll = (m_glob + jnp.log(s_glob) - gold) * w_c
+            return (tot + jnp.sum(nll), cnt + jnp.sum(w_c)), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (hs, ys, ws))
+        return tot[None], cnt[None]
+
+    tot, cnt = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bspec, None, None), P(bspec, None), P(bspec, None),
+                  P("model", None)),
+        out_specs=(P(bspec), P(bspec)),
+        check_vma=False,
+    )(hidden, labels, mask.astype(jnp.float32), table)
+    return jnp.sum(tot) / jnp.maximum(jnp.sum(cnt), 1.0)
+
+
+def branchynet_joint_loss(params, cfg: ArchConfig, exit_hidden, final_hidden,
+                          labels, weights: Tuple[float, float], mask=None,
+                          aux: jnp.ndarray | None = None,
+                          aux_weight: float = 0.01):
+    """L = w_exit * CE(exit) + w_final * CE(final) (+ MoE aux).
+    Hidden tensors are pre-normalised (B, S, d); labels (B, S)."""
+    bb = params["backbone"]
+    ce = (vocab_parallel_ce
+          if (_vp_applicable(cfg) and
+              (cfg.tie_embeddings or "head" not in bb))
+          else lambda *a, **k: chunked_ce(*a, **k))
+    l_exit = ce(bb, cfg, exit_hidden, labels, mask)
+    l_final = ce(bb, cfg, final_hidden, labels, mask)
+    loss = weights[0] * l_exit + weights[1] * l_final
+    if aux is not None:
+        loss = loss + aux_weight * aux
+    return loss, {"ce_exit": l_exit, "ce_final": l_final}
+
+
+def cnn_joint_loss(logits_list: Sequence[jnp.ndarray], labels,
+                   weights: Sequence[float]):
+    """BranchyNet joint loss for the CNN family: weighted CE over all exits."""
+    total = jnp.zeros((), jnp.float32)
+    metrics = {}
+    for i, (lg, w) in enumerate(zip(logits_list, weights)):
+        logp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+        nll = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+        total = total + w * nll
+        metrics[f"ce_exit{i}"] = nll
+    return total, metrics

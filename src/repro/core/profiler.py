@@ -1,0 +1,116 @@
+"""Early-Exit Profiler — paper §III-B.1.
+
+Apportions a profiling set into multiple distinct splits (similar average
+hard-sample probability, individual variation), runs batched inference,
+and collects per-exit probability, per-exit accuracy and cumulative
+accuracy. The average hard probability feeds the ATHEENA optimizer as p.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import exit_decision as ed
+
+
+@dataclass
+class ExitProfile:
+    c_thr: float
+    p_hard: float                      # fraction NOT exiting early (mean)
+    p_hard_splits: List[float]         # per-split variation
+    exit_accuracy: float               # accuracy of exited samples at exit 1
+    final_accuracy: float              # accuracy of samples finishing stage 2
+    cumulative_accuracy: float         # overall EE accuracy
+    baseline_accuracy: float           # all samples through the full net
+    n_samples: int
+
+    def as_dict(self):
+        return self.__dict__.copy()
+
+
+def apportion(n: int, n_splits: int, rng: np.random.Generator) -> List[np.ndarray]:
+    """Split indices into n_splits random, equal, disjoint subsets."""
+    idx = rng.permutation(n)
+    return [np.array(s) for s in np.array_split(idx, n_splits)]
+
+
+def profile_early_exit(
+    exit_logits: jnp.ndarray,          # (N, C) stage-1 exit logits
+    final_logits: jnp.ndarray,         # (N, C) full-network logits
+    labels: jnp.ndarray,               # (N,)
+    c_thr: float,
+    n_splits: int = 5,
+    seed: int = 0,
+) -> ExitProfile:
+    """Pure profiling math on precomputed logits (model-agnostic)."""
+    exit_mask = np.asarray(ed.exit_decision(exit_logits, c_thr))
+    exit_pred = np.asarray(jnp.argmax(exit_logits, axis=-1))
+    final_pred = np.asarray(jnp.argmax(final_logits, axis=-1))
+    y = np.asarray(labels)
+    n = len(y)
+
+    hard = ~exit_mask
+    p_hard = float(hard.mean())
+    rng = np.random.default_rng(seed)
+    splits = apportion(n, n_splits, rng)
+    p_splits = [float(hard[s].mean()) for s in splits]
+
+    exit_acc = float((exit_pred[exit_mask] == y[exit_mask]).mean()) if exit_mask.any() else 0.0
+    fin_acc = float((final_pred[hard] == y[hard]).mean()) if hard.any() else 0.0
+    ee_pred = np.where(exit_mask, exit_pred, final_pred)
+    cum_acc = float((ee_pred == y).mean())
+    base_acc = float((final_pred == y).mean())
+    return ExitProfile(
+        c_thr=c_thr, p_hard=p_hard, p_hard_splits=p_splits,
+        exit_accuracy=exit_acc, final_accuracy=fin_acc,
+        cumulative_accuracy=cum_acc, baseline_accuracy=base_acc,
+        n_samples=n,
+    )
+
+
+def profile_model(
+    stage1_fn: Callable,               # batch -> exit logits (B, C)
+    full_fn: Callable,                 # batch -> final logits (B, C)
+    batches: Sequence,                 # iterable of (inputs, labels)
+    c_thr: float,
+    n_splits: int = 5,
+) -> ExitProfile:
+    """Run batched inference over the profiling set and profile."""
+    e_all, f_all, y_all = [], [], []
+    for x, y in batches:
+        e_all.append(np.asarray(stage1_fn(x)))
+        f_all.append(np.asarray(full_fn(x)))
+        y_all.append(np.asarray(y))
+    return profile_early_exit(jnp.asarray(np.concatenate(e_all)),
+                              jnp.asarray(np.concatenate(f_all)),
+                              jnp.asarray(np.concatenate(y_all)),
+                              c_thr, n_splits=n_splits)
+
+
+def sweep_thresholds(exit_logits, final_logits, labels,
+                     thresholds: Sequence[float]) -> List[ExitProfile]:
+    """The accuracy/p trade-off curve the user picks C_thr from."""
+    return [profile_early_exit(exit_logits, final_logits, labels, t)
+            for t in thresholds]
+
+
+def make_test_set_with_q(exit_logits, labels, c_thr: float, q: float,
+                         n: int, seed: int = 0) -> np.ndarray:
+    """Sample indices whose hard fraction is exactly q (paper §IV-A: 'sampled
+    test set proportioned according to the required test probabilities but
+    distributed randomly within the batch')."""
+    exit_mask = np.asarray(ed.exit_decision(exit_logits, c_thr))
+    hard_idx = np.flatnonzero(~exit_mask)
+    easy_idx = np.flatnonzero(exit_mask)
+    n_hard = int(round(q * n))
+    rng = np.random.default_rng(seed)
+    if len(hard_idx) < n_hard or len(easy_idx) < n - n_hard:
+        raise ValueError("profiling set too small for requested q")
+    pick = np.concatenate([rng.choice(hard_idx, n_hard, replace=False),
+                           rng.choice(easy_idx, n - n_hard, replace=False)])
+    rng.shuffle(pick)
+    return pick

@@ -1,0 +1,61 @@
+"""Stage-mesh apportionment: turn a combined TAP design point into disjoint
+device-mesh slices for stage 1 / stage 2 (the spatial analogue of the FPGA
+floorplan: both stages resident simultaneously, no reconfiguration).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+
+from repro.core.perf_model import ShardPlan
+from repro.core.tap import CombinedDesign
+
+
+@dataclass(frozen=True)
+class StageMeshPlan:
+    chips1: int
+    chips2: int
+    plan1: ShardPlan
+    plan2: ShardPlan
+
+    @classmethod
+    def from_design(cls, design: CombinedDesign) -> "StageMeshPlan":
+        return cls(
+            chips1=int(design.stage1.resources[0]),
+            chips2=int(design.stage2.resources[0]),
+            plan1=design.stage1.meta.get("plan") or
+            design.stage1.meta.get("roofline", {}).get("plan"),
+            plan2=design.stage2.meta.get("plan") or
+            design.stage2.meta.get("roofline", {}).get("plan"),
+        )
+
+
+def make_stage_meshes(devices, plan: StageMeshPlan
+                      ) -> Tuple[jax.sharding.Mesh, jax.sharding.Mesh]:
+    """Carve two disjoint submeshes out of a flat device list. Stage 1 takes
+    the first chips1 devices, stage 2 the next chips2. Each submesh is
+    (data, model) shaped per its ShardPlan."""
+    devs = np.asarray(devices).reshape(-1)
+    need = plan.chips1 + plan.chips2
+    if len(devs) < need:
+        raise ValueError(f"{need} chips required, {len(devs)} available")
+    d1 = devs[:plan.chips1].reshape(plan.plan1.dp, plan.plan1.tp)
+    d2 = devs[plan.chips1:need].reshape(plan.plan2.dp, plan.plan2.tp)
+    m1 = jax.sharding.Mesh(d1, ("data", "model"))
+    m2 = jax.sharding.Mesh(d2, ("data", "model"))
+    return m1, m2
+
+
+def stage2_capacity(batch: int, p: float, multiple: int = 8,
+                    slack: float = 0.1) -> int:
+    """Bucket size for the stage-2 hard-sample slab: ceil((p+slack)*B),
+    rounded up to the sharding multiple (the conditional buffer's BRAM-slack
+    analogue — over-provisioning stage 2 'increases robustness to variation
+    in the hard samples' exit probability', §IV-A)."""
+    c = int(np.ceil((p + slack) * batch))
+    c = max(multiple, ((c + multiple - 1) // multiple) * multiple)
+    return min(c, batch)

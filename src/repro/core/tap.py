@@ -1,0 +1,149 @@
+"""Throughput-Area Pareto (TAP) functions and the combination operator ⊕.
+
+Paper §III-A. A TAP function f maps a resource budget to the best achievable
+throughput for one network stage, and is (non-strictly) monotonically
+increasing in each resource argument. Stage TAPs are merged by Eq. (1):
+
+    (f ⊕_{p,q} g)(x) = min(f(x1), g(x2)/q)
+    where (x1, x2) = argmax_{x1+x2 <= x} min(f(x1), g(x2)/p)
+
+p: design-time probability a sample is "hard" (needs stage 2);
+q: probability actually encountered at run time.
+
+On TPU the resource vector is (chips, hbm_gb) — chips are the DSP/LUT
+analogue (compute+bandwidth scale with them), HBM feasibility is the BRAM
+analogue. The implementation is resource-vector-generic.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class DesignPoint:
+    resources: Tuple[float, ...]     # e.g. (chips,) or (chips, hbm_gb)
+    throughput: float                # samples/s
+    meta: dict = field(default_factory=dict, compare=False, hash=False)
+
+    def fits(self, budget: Sequence[float]) -> bool:
+        return all(r <= b + 1e-9 for r, b in zip(self.resources, budget))
+
+
+class TAPFunction:
+    """A discrete TAP function: the Pareto set of feasible design points."""
+
+    def __init__(self, points: Sequence[DesignPoint], name: str = ""):
+        self.name = name
+        self.points = self._pareto(list(points))
+
+    @staticmethod
+    def _pareto(points: List[DesignPoint]) -> List[DesignPoint]:
+        kept = []
+        for p in sorted(points, key=lambda d: (d.throughput, *(-r for r in d.resources)),
+                        reverse=True):
+            if not any(k.throughput >= p.throughput - 1e-12 and
+                       all(kr <= pr + 1e-9 for kr, pr in zip(k.resources, p.resources))
+                       and k is not p for k in kept):
+                kept.append(p)
+        return sorted(kept, key=lambda d: d.resources)
+
+    def __call__(self, budget: Sequence[float]) -> float:
+        best = self.query(budget)
+        return best.throughput if best else 0.0
+
+    def query(self, budget: Sequence[float]) -> Optional[DesignPoint]:
+        feas = [p for p in self.points if p.fits(budget)]
+        return max(feas, key=lambda p: p.throughput) if feas else None
+
+    def is_monotone(self) -> bool:
+        """Check the defining property on the stored points."""
+        for a in self.points:
+            for b in self.points:
+                if all(ar <= br for ar, br in zip(a.resources, b.resources)):
+                    if self(a.resources) > self(b.resources) + 1e-9:
+                        return False
+        return True
+
+
+@dataclass(frozen=True)
+class CombinedDesign:
+    """The result of f ⊕_{p,q} g at a fixed total budget."""
+    stage1: DesignPoint
+    stage2: DesignPoint
+    p: float
+    design_throughput: float          # min(f(x1), g(x2)/p)
+
+    def throughput_at(self, q: float) -> float:
+        """Runtime throughput under encountered hard-probability q (Eq. 1
+        outer min). q <= p can exceed the design point up to the stage-1
+        bound — the paper's Fig. 4 upper shaded region."""
+        if q <= 0:
+            return self.stage1.throughput
+        return min(self.stage1.throughput, self.stage2.throughput / q)
+
+    @property
+    def resources(self) -> Tuple[float, ...]:
+        return tuple(a + b for a, b in
+                     zip(self.stage1.resources, self.stage2.resources))
+
+
+def combine(f: TAPFunction, g: TAPFunction, p: float,
+            budget: Sequence[float]) -> Optional[CombinedDesign]:
+    """Eq. (1): pick (x1, x2), x1 + x2 <= budget, maximising
+    min(f(x1), g(x2)/p). Enumerates the (small) Pareto sets directly —
+    exactly the argmax in the paper, no heuristics."""
+    assert 0.0 < p <= 1.0
+    best: Optional[CombinedDesign] = None
+    for a, b in itertools.product(f.points, g.points):
+        tot = [ar + br for ar, br in zip(a.resources, b.resources)]
+        if any(t > bb + 1e-9 for t, bb in zip(tot, budget)):
+            continue
+        d = min(a.throughput, b.throughput / p)
+        if best is None or d > best.design_throughput:
+            best = CombinedDesign(stage1=a, stage2=b, p=p, design_throughput=d)
+    return best
+
+
+def combine_multistage(taps: Sequence[TAPFunction], survival: Sequence[float],
+                       budget: Sequence[float]) -> Optional[dict]:
+    """N-stage generalization ('trivial to extend' — paper §III-A): stage i
+    sees a fraction survival[i] of input samples (survival[0] == 1).
+    Maximise min_i f_i(x_i) / survival[i] subject to sum x_i <= budget.
+    Exhaustive over Pareto-set products (fine for <= 4 stages)."""
+    assert len(taps) == len(survival) and abs(survival[0] - 1.0) < 1e-9
+    best = None
+    for combo in itertools.product(*[t.points for t in taps]):
+        tot = [sum(c.resources[i] for c in combo)
+               for i in range(len(budget))]
+        if any(t > b + 1e-9 for t, b in zip(tot, budget)):
+            continue
+        thr = min(c.throughput / s for c, s in zip(combo, survival))
+        if best is None or thr > best["design_throughput"]:
+            best = {"stages": combo, "design_throughput": thr,
+                    "survival": tuple(survival)}
+    return best
+
+
+def robustness_band(design: CombinedDesign, qs: Sequence[float]) -> Dict[float, float]:
+    """Fig. 4 / Fig. 9 sweep: runtime throughput for each encountered q."""
+    return {q: design.throughput_at(q) for q in qs}
+
+
+def iso_throughput_resources(f_comb: TAPFunction, baseline: TAPFunction,
+                             ) -> Optional[Tuple[float, float, float]]:
+    """Paper's '46% of resources at matched throughput' metric: find the
+    smallest combined-resource budget whose throughput >= the baseline's best,
+    and report (combined_res, baseline_res, ratio) on the first resource
+    axis (chips)."""
+    if not baseline.points or not f_comb.points:
+        return None
+    target = max(p.throughput for p in baseline.points)
+    base_res = min(p.resources[0] for p in baseline.points
+                   if p.throughput >= target - 1e-9)
+    cand = [p.resources[0] for p in f_comb.points if p.throughput >= target - 1e-9]
+    if not cand:
+        return None
+    comb_res = min(cand)
+    return comb_res, base_res, comb_res / base_res

@@ -1,0 +1,167 @@
+"""Synthetic sharded data pipeline.
+
+Deterministic, seekable, host-shardable token streams (training) and a
+clustered classification generator with *controllable difficulty structure*
+(profiling / EE experiments need a dataset where some samples genuinely are
+easy and some hard — iid noise has no early-exit signal).
+
+Production behaviours implemented:
+  - per-host sharding: host i of H draws rows [i::H] of each global batch;
+  - seekability: batch t is a pure function of (seed, t) so a restored
+    checkpoint replays the exact stream (bit-exact resume tests rely on it);
+  - straggler injection + mitigation: an optional delay model simulates slow
+    hosts; ``fetch_with_timeout`` re-issues the draw against the backup
+    generator (batch re-issue — the data-side straggler strategy).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, Iterator, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# LM token stream
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LMStreamSpec:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_hosts: int = 1
+    host_id: int = 0
+
+    @property
+    def host_batch(self) -> int:
+        assert self.global_batch % self.n_hosts == 0
+        return self.global_batch // self.n_hosts
+
+
+def lm_batch(spec: LMStreamSpec, step: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(tokens, labels) for global step ``step`` — this host's shard only.
+
+    Tokens follow a Zipf-ish marginal with a per-sequence Markov repeat
+    process so sequences are compressible (finite loss floor) rather than
+    uniform noise."""
+    rng = np.random.default_rng(
+        np.random.SeedSequence([spec.seed, step, spec.host_id]))
+    b, s = spec.host_batch, spec.seq_len
+    # zipf marginal clipped to vocab
+    base = rng.zipf(1.3, size=(b, s + 1)).astype(np.int64)
+    base = (base - 1) % spec.vocab
+    # markov repeats: with prob .3 copy the previous token (structure to learn)
+    rep = rng.random((b, s + 1)) < 0.3
+    for j in range(1, s + 1):
+        base[:, j] = np.where(rep[:, j], base[:, j - 1], base[:, j])
+    tokens = base[:, :-1].astype(np.int32)
+    labels = base[:, 1:].astype(np.int32)
+    return tokens, labels
+
+
+def lm_stream(spec: LMStreamSpec, start_step: int = 0
+              ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    t = start_step
+    while True:
+        yield lm_batch(spec, t)
+        t += 1
+
+
+# ---------------------------------------------------------------------------
+# classification set with difficulty structure (EE profiling)
+# ---------------------------------------------------------------------------
+
+def clustered_classification(n: int, n_classes: int, dim: int, *,
+                             hard_frac: float = 0.3, seed: int = 0,
+                             margin_easy: float = 4.0, margin_hard: float = 0.6
+                             ) -> dict:
+    """Gaussian class clusters; a ``hard_frac`` of samples are drawn near the
+    decision boundary (small margin), the rest far (large margin). Returns
+    x (n, dim), y (n,), is_hard (n,) — the ground-truth difficulty used to
+    sanity-check the profiler (profiled p should track hard_frac)."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_classes, dim)).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    y = rng.integers(0, n_classes, size=n)
+    is_hard = rng.random(n) < hard_frac
+    margin = np.where(is_hard, margin_hard, margin_easy).astype(np.float32)
+    x = centers[y] * margin[:, None] + rng.normal(
+        size=(n, dim)).astype(np.float32)
+    return {"x": x.astype(np.float32), "y": y.astype(np.int32),
+            "is_hard": is_hard}
+
+
+def mnist_like(n: int, *, seed: int = 0, hard_frac: float = 0.3) -> dict:
+    """28x28x1 image-shaped version of the clustered set (for the paper's
+    B-LeNet pipeline): class templates + per-sample noise scaled by
+    difficulty."""
+    rng = np.random.default_rng(seed)
+    templates = rng.normal(size=(10, 28, 28, 1)).astype(np.float32)
+    y = rng.integers(0, 10, size=n)
+    is_hard = rng.random(n) < hard_frac
+    noise_scale = np.where(is_hard, 2.5, 0.5).astype(np.float32)
+    x = templates[y] + rng.normal(size=(n, 28, 28, 1)).astype(np.float32) \
+        * noise_scale[:, None, None, None]
+    return {"x": x, "y": y.astype(np.int32), "is_hard": is_hard}
+
+
+# ---------------------------------------------------------------------------
+# straggler injection + mitigation
+# ---------------------------------------------------------------------------
+
+class StragglerModel:
+    """Simulates a host that occasionally stalls on a fetch."""
+
+    def __init__(self, stall_prob: float = 0.0, stall_s: float = 1.0,
+                 seed: int = 0):
+        self.stall_prob = stall_prob
+        self.stall_s = stall_s
+        self._rng = np.random.default_rng(seed)
+
+    def maybe_stall(self):
+        if self.stall_prob and self._rng.random() < self.stall_prob:
+            time.sleep(self.stall_s)
+            return True
+        return False
+
+
+def fetch_with_timeout(fetch: Callable[[], object], *, timeout_s: float,
+                       backup: Optional[Callable[[], object]] = None):
+    """Run ``fetch`` in a worker thread; on timeout re-issue via ``backup``
+    (defaults to ``fetch`` itself — the draw is deterministic so the re-issue
+    returns identical data). Returns (value, timed_out)."""
+    result: list = [None]
+    err: list = [None]
+
+    def run():
+        try:
+            result[0] = fetch()
+        except Exception as e:                      # pragma: no cover
+            err[0] = e
+
+    th = threading.Thread(target=run, daemon=True)
+    th.start()
+    th.join(timeout_s)
+    if th.is_alive():
+        value = (backup or fetch)()
+        return value, True
+    if err[0] is not None:
+        raise err[0]
+    return result[0], False
+
+
+# ---------------------------------------------------------------------------
+# device placement
+# ---------------------------------------------------------------------------
+
+def shard_batch(batch, sharding):
+    """Place a host-local numpy batch onto devices under ``sharding``."""
+    return jax.tree.map(
+        lambda x: jax.device_put(jnp.asarray(x), sharding), batch)

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+exit_decision   — the Exit Decision layer (paper §III-C.1, Eq. 4) as one
+                  fused online reduction over the class axis.
+flash_attention — blocked causal attention; the 32k-prefill FLOP hot-spot.
+gather_compact  — stream compaction; the Conditional Buffer (§III-C.2).
+
+Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with CPU-interpret dispatch) and ref.py (pure-jnp oracle used by the
+allclose sweeps in tests/).
+"""
+from repro.kernels.exit_decision import exit_decision_op
+from repro.kernels.flash_attention import flash_attention_op
+from repro.kernels.gather_compact import gather_compact_op
+
+__all__ = ["exit_decision_op", "flash_attention_op", "gather_compact_op"]

@@ -1,0 +1,5 @@
+from repro.kernels.exit_decision.kernel import exit_decision_pallas
+from repro.kernels.exit_decision.ops import exit_decision_op
+from repro.kernels.exit_decision.ref import exit_decision_ref
+
+__all__ = ["exit_decision_pallas", "exit_decision_op", "exit_decision_ref"]

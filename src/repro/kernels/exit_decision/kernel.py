@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: fused online Exit Decision (paper §III-C.1).
+
+The FPGA design evaluates Eq. (4) ``max_i exp(x_i) > C_thr * sum_j exp(x_j)``
+with an fp32 exp/adder/comparator tree. The TPU-native form max-shifts the
+exponent so the left side collapses to exp(0) = 1 and the entire decision is
+ONE online reduction over the class axis:
+
+    1 > C_thr * sum_j exp(x_j - m),   m = max_j x_j
+
+tracked with the same (m, l) running pair flash attention uses. The kernel
+streams vocab tiles (V up to 152k never fits VMEM at once), keeping per-row
+(m, sum-exp, argmax) accumulators in VMEM scratch, and emits the fused triple
+(exit_mask, argmax class, confidence) on the last tile — so the stage-1
+logits are read from HBM exactly once and no (B, V) softmax is ever
+materialized.
+
+Grid: (B/bb, V/bv), vocab axis innermost (sequential on TPU, so scratch
+accumulators carry across vocab tiles).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _exit_decision_kernel(thr_ref, x_ref, exit_ref, pred_ref, conf_ref,
+                          m_ref, s_ref, am_ref, *, n_v_blocks: int, vocab: int,
+                          block_v: int):
+    j = pl.program_id(1)
+
+    # -- reset accumulators at the first vocab tile ---------------------------
+    @pl.when(j == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        am_ref[...] = jnp.zeros_like(am_ref)
+
+    x = x_ref[...].astype(jnp.float32)                     # (bb, bv)
+    bb, bv = x.shape
+    col = j * block_v + jax.lax.broadcasted_iota(jnp.int32, (bb, bv), 1)
+    x = jnp.where(col < vocab, x, NEG_INF)                 # mask vocab padding
+
+    bm = jnp.max(x, axis=-1, keepdims=True)                # (bb, 1) tile max
+    # first-occurrence argmax inside the tile
+    hit = x == bm
+    bidx = jnp.min(jnp.where(hit, col, vocab), axis=-1, keepdims=True)
+
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, bm)
+    s_ref[...] = (s_ref[...] * jnp.exp(m_old - m_new)
+                  + jnp.sum(jnp.exp(x - m_new), axis=-1, keepdims=True))
+    # strictly-greater update keeps the earliest global argmax on ties
+    am_ref[...] = jnp.where(bm > m_old, bidx, am_ref[...])
+    m_ref[...] = m_new
+
+    # -- finalize on the last vocab tile --------------------------------------
+    @pl.when(j == n_v_blocks - 1)
+    def _():
+        s = s_ref[...]                                     # (bb, 1)
+        thr = thr_ref[0]
+        exit_ref[...] = thr * s < 1.0                      # Eq. (4), shifted
+        conf_ref[...] = 1.0 / s
+        pred_ref[...] = am_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_b", "block_v", "interpret"))
+def exit_decision_pallas(logits: jnp.ndarray, c_thr, *, block_b: int = 8,
+                         block_v: int = 2048, interpret: bool = False):
+    """logits: (B, V). Returns (exit bool (B,), pred i32 (B,), conf f32 (B,))."""
+    B, V = logits.shape
+    bb = min(block_b, B)
+    bv = min(block_v, max(128, V))
+    n_b = pl.cdiv(B, bb)
+    n_v = pl.cdiv(V, bv)
+    thr = jnp.asarray([c_thr], jnp.float32)
+
+    kernel = functools.partial(_exit_decision_kernel, n_v_blocks=n_v,
+                               vocab=V, block_v=bv)
+    out_shape = (
+        jax.ShapeDtypeStruct((B, 1), jnp.bool_),
+        jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        jax.ShapeDtypeStruct((B, 1), jnp.float32),
+    )
+    row_spec = pl.BlockSpec((bb, 1), lambda i, j: (i, 0))
+    exit_m, pred, conf = pl.pallas_call(
+        kernel,
+        grid=(n_b, n_v),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),         # threshold scalar
+            pl.BlockSpec((bb, bv), lambda i, j: (i, j)),   # logits tile
+        ],
+        out_specs=(row_spec, row_spec, row_spec),
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((bb, 1), jnp.float32),              # running max m
+            pltpu.VMEM((bb, 1), jnp.float32),              # running sum-exp l
+            pltpu.VMEM((bb, 1), jnp.int32),                # running argmax
+        ],
+        interpret=interpret,
+    )(thr, logits)
+    return exit_m[:, 0], pred[:, 0], conf[:, 0]

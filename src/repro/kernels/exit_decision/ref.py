@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the Exit Decision kernel (paper Eqs. 2-4).
+
+Semantics contract (shared with the Pallas kernel):
+    exit_mask[i] = max_softmax(logits[i]) > c_thr          (Eq. 2)
+  computed division-free and max-shifted (Eq. 4 + stabilization):
+    1 > c_thr * sum_j exp(x_ij - m_i),  m_i = max_j x_ij
+    conf[i] = 1 / sum_j exp(x_ij - m_i)
+    pred[i] = argmax_j x_ij   (first occurrence on ties, like jnp.argmax)
+All internal arithmetic in fp32 regardless of input dtype.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def exit_decision_ref(logits: jnp.ndarray, c_thr: float
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """logits: (B, V) any float. Returns (exit bool (B,), pred i32 (B,),
+    conf f32 (B,))."""
+    x = logits.astype(jnp.float32)
+    m = jnp.max(x, axis=-1)
+    s = jnp.sum(jnp.exp(x - m[:, None]), axis=-1)
+    conf = 1.0 / s
+    pred = jnp.argmax(x, axis=-1).astype(jnp.int32)
+    exit_mask = jnp.float32(c_thr) * s < 1.0
+    return exit_mask, pred, conf

@@ -1,0 +1,5 @@
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ops import flash_attention_op
+from repro.kernels.flash_attention.ref import mha_ref
+
+__all__ = ["flash_attention_pallas", "flash_attention_op", "mha_ref"]

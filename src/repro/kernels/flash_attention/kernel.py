@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: blocked causal (optionally windowed) flash attention.
+
+The 32k-prefill is the dominant FLOP hot-spot of every attention arch in the
+pool; this kernel keeps the (bq, bk) score tile resident in VMEM, carries the
+online-softmax (m, l, acc) triple across kv tiles in VMEM scratch, and never
+materializes the (S, S) score matrix in HBM — the same online (m, l) idiom as
+the exit-decision kernel, which is the paper's Eq. (4) machinery.
+
+TPU adaptation notes (vs. the CUDA flash-attention formulation):
+  - tile shapes default to (128, 128): the MXU is a 128x128 systolic array
+    and the lane dimension is 128, so both matmuls in the inner loop hit
+    hardware-native shapes;
+  - the kv axis is the innermost sequential grid dim; causal + window bounds
+    prune whole tiles via @pl.when (the TPU grid is sequential, so a pruned
+    tile costs control flow only — the block-skip analogue of warp-level
+    early-out);
+  - GQA is folded into the BlockSpec index_map (kv head = h * KH // H), so
+    no repeated K/V is ever written to HBM.
+
+Grid: (B, H, S/bq, S/bk).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, off_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, scale: float, seq_len: int, block_q: int, block_k: int,
+                  n_k_blocks: int, causal: bool, window: Optional[int]):
+    i = pl.program_id(2)          # q tile
+    j = pl.program_id(3)          # kv tile
+
+    @pl.when(j == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # tile-level causal/window pruning: run only tiles that intersect the
+    # mask. ``off`` = absolute position of q row 0 (sequence-parallel shards
+    # / chunked prefill pass their shard offset).
+    off = off_ref[0, 0]
+    q_lo, q_hi = i * block_q + off, i * block_q + block_q - 1 + off
+    k_lo = j * block_k
+    run = True
+    if causal:
+        run = jnp.asarray(k_lo <= q_hi)
+    if window is not None:
+        run = jnp.logical_and(run, q_lo - (k_lo + block_k - 1) < window)
+
+    @pl.when(run)
+    def _():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+
+        qi = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        ki = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = ki < seq_len
+        if causal:
+            mask &= qi >= ki
+        if window is not None:
+            mask &= (qi - ki) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_old = m_ref[...]                                   # (bq, 1)
+        m_new = jnp.maximum(m_old, jnp.max(s, axis=-1, keepdims=True))
+        # rows whose tiles are all masked keep m = -inf; guard the exp
+        m_safe = jnp.where(m_new == NEG_INF, 0.0, m_new)
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.where(m_old == NEG_INF, 0.0, jnp.exp(m_old - m_safe))
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+        # zero OOB kv rows: 0 * garbage would still poison the p @ v matmul
+        kv_valid = (k_lo + jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)
+                    < seq_len)
+        v = jnp.where(kv_valid, v, 0.0)
+        acc_ref[...] = (acc_ref[...] * alpha
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+        m_ref[...] = m_new
+
+    @pl.when(j == n_k_blocks - 1)
+    def _():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)                      # fully-masked rows
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                              "interpret"))
+def flash_attention_pallas(q, k, v, q_offset=0, *, causal: bool = True,
+                           window: Optional[int] = None, block_q: int = 128,
+                           block_k: int = 128, interpret: bool = False):
+    """q: (B, H, Sq, D); k, v: (B, KH, Sk, D). Returns (B, H, Sq, D) in
+    q.dtype. ``q_offset`` (int or traced scalar) is the absolute position of
+    q[:, :, 0] — sequence-parallel shards pass shard_index * Sq."""
+    B, H, Sq, D = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    assert H % KH == 0 and k.shape == v.shape
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    n_q = pl.cdiv(Sq, bq)
+    n_k = pl.cdiv(Sk, bk)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=D ** -0.5, seq_len=Sk, block_q=bq, block_k=bk,
+        n_k_blocks=n_k, causal=causal, window=window)
+
+    grp = H // KH
+    off = jnp.full((1, 1), q_offset, jnp.int32)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // grp, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // grp, j, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),                # running max
+            pltpu.VMEM((bq, 1), jnp.float32),                # running sum
+            pltpu.VMEM((bq, D), jnp.float32),                # output accum
+        ],
+        interpret=interpret,
+    )(q, k, v, off)

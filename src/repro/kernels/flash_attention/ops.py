@@ -1,0 +1,43 @@
+"""Jit'd public wrapper for blocked flash attention.
+
+Handles sequence padding to tile multiples and backend dispatch (interpret
+on CPU for validation, compiled Pallas on TPU). Layout contract is
+(B, H, S, D) — the models' (B, S, H, D) tensors are transposed here once.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import mha_ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "use_pallas"))
+def flash_attention_op(q, k, v, *, causal: bool = True,
+                       window: Optional[int] = None, use_pallas: bool = True):
+    """q: (B, S, H, D); k, v: (B, S, KH, D) — model layout. Returns same."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    S = qt.shape[2]
+    if use_pallas:
+        pad = (-S) % 128 if S > 128 else 0
+        if pad:
+            qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        o = flash_attention_pallas(qt, kt, vt, causal=causal, window=window,
+                                   interpret=_on_cpu())
+        o = o[:, :, :S]
+    else:
+        o = mha_ref(qt, kt, vt, causal=causal, window=window)
+    return o.transpose(0, 2, 1, 3)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for blocked causal attention (fp32 softmax).
+
+Semantics contract shared with the Pallas kernel:
+  - q: (B, H, S, D), k/v: (B, KH, S, D) with H % KH == 0 (GQA: query head h
+    attends kv head h * KH // H).
+  - scores scaled by D**-0.5, causal mask (q_pos >= kv_pos), optional local
+    window (q_pos - kv_pos < window), softmax in fp32, output cast back to
+    q.dtype.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+            causal: bool = True, window: Optional[int] = None) -> jnp.ndarray:
+    B, H, S, D = q.shape
+    KH = k.shape[1]
+    rep = H // KH
+    kf = jnp.repeat(k, rep, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, rep, axis=1).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * (D ** -0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qi >= ki
+    if window is not None:
+        mask &= (qi - ki) < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

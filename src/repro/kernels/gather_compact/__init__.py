@@ -1,0 +1,5 @@
+from repro.kernels.gather_compact.kernel import gather_compact_pallas
+from repro.kernels.gather_compact.ops import gather_compact_op
+from repro.kernels.gather_compact.ref import gather_compact_ref
+
+__all__ = ["gather_compact_pallas", "gather_compact_op", "gather_compact_ref"]

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: stream compaction — the Conditional Buffer (§III-C.2).
+
+The FPGA conditional buffer drops an exiting sample's feature map by
+invalidating its addresses in one cycle. The TPU analogue: a stable
+prefix-sum partition computed ONCE into SMEM scratch (grid step 0), then a
+row-gather of surviving samples streamed feature-tile by feature-tile —
+x is read once from HBM and only the compacted slab is written back, so the
+stage-2 input slab never round-trips through host memory (the paper keeps
+the decision on-chip for exactly this reason).
+
+Grid: (F / bf,), feature axis only; the (B,) mask and the (C,) take-vector
+live in SMEM across all steps. Dynamic row-gather inside a tile lowers to
+the TPU dynamic-gather over sublanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_compact_kernel(mask_ref, x_ref, slab_ref, ids_ref, nhard_ref,
+                           take_ref, *, batch: int, capacity: int):
+    j = pl.program_id(0)
+
+    # -- step 0: prefix-sum partition -> take vector + ids + n_hard (SMEM) ----
+    @pl.when(j == 0)
+    def _():
+        hard = mask_ref[...].astype(jnp.int32)              # (B,)
+        n_hard = jnp.sum(hard)
+        pos_hard = jnp.cumsum(hard) - 1                     # slot among hard
+        pos_easy = jnp.cumsum(1 - hard) - 1                 # slot among easy
+        slot = jnp.where(hard == 1, pos_hard, n_hard + pos_easy)
+        perm = jnp.zeros((batch,), jnp.int32).at[slot].set(
+            jnp.arange(batch, dtype=jnp.int32))
+        take = perm[:capacity] if capacity <= batch else jnp.pad(
+            perm, (0, capacity - batch))
+        valid = jnp.arange(capacity, dtype=jnp.int32) < jnp.minimum(
+            n_hard, capacity)
+        take = jnp.where(valid, take, 0)
+        take_ref[...] = take
+        ids_ref[...] = jnp.where(valid, take, -1)
+        nhard_ref[0] = n_hard
+
+    # -- every step: gather surviving rows for this feature tile --------------
+    xt = x_ref[...]                                         # (B, bf)
+    slab_ref[...] = jnp.take(xt, take_ref[...], axis=0)     # (C, bf)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "block_f",
+                                             "interpret"))
+def gather_compact_pallas(x: jnp.ndarray, hard_mask: jnp.ndarray,
+                          capacity: int, *, block_f: int = 2048,
+                          interpret: bool = False):
+    """x: (B, F); hard_mask: (B,) bool. Returns (slab (C, F), slab_ids (C,),
+    n_hard ())."""
+    B, F = x.shape
+    bf = min(block_f, F)
+    n_f = pl.cdiv(F, bf)
+
+    kernel = functools.partial(_gather_compact_kernel, batch=B,
+                               capacity=capacity)
+    slab, ids, nh = pl.pallas_call(
+        kernel,
+        grid=(n_f,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),          # mask (B,)
+            pl.BlockSpec((B, bf), lambda j: (0, j)),        # x feature tile
+        ],
+        out_specs=(
+            pl.BlockSpec((capacity, bf), lambda j: (0, j)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),          # ids (C,)
+            pl.BlockSpec(memory_space=pltpu.SMEM),          # n_hard (1,)
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((capacity, F), x.dtype),
+            jax.ShapeDtypeStruct((capacity,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ),
+        scratch_shapes=[
+            pltpu.SMEM((capacity,), jnp.int32),             # take vector
+        ],
+        interpret=interpret,
+    )(hard_mask, x)
+    return slab, ids, nh[0]

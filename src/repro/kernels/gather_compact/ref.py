@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the stream-compaction (Conditional Buffer) kernel.
+
+Semantics contract (paper §III-C.2 mapped to static shapes):
+  Given x (B, F), hard_mask (B,) bool and a static capacity C:
+    - slab (C, F): rows of x whose mask is True, in original order (stable),
+      padded with x's row 0 for flush slots (the paper flushes the stage-2
+      pipeline with unused data + an unused Sample ID);
+    - slab_ids (C,): the original row index (Sample ID) per slab row, -1 for
+      flush slots and for overflow-dropped rows;
+    - n_hard (): total number of True rows (may exceed C: overflow).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def gather_compact_ref(x: jnp.ndarray, hard_mask: jnp.ndarray, capacity: int
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    b = hard_mask.shape[0]
+    hard = hard_mask.astype(jnp.int32)
+    n_hard = jnp.sum(hard)
+    pos_hard = jnp.cumsum(hard) - 1
+    pos_easy = jnp.cumsum(1 - hard) - 1
+    slot = jnp.where(hard_mask, pos_hard, n_hard + pos_easy)
+    perm = jnp.zeros((b,), jnp.int32).at[slot].set(
+        jnp.arange(b, dtype=jnp.int32))
+    take = perm[:capacity]
+    valid = jnp.arange(capacity) < jnp.minimum(n_hard, capacity)
+    take = jnp.where(valid, take, 0)
+    slab = jnp.take(x, take, axis=0)
+    slab_ids = jnp.where(valid, take, -1).astype(jnp.int32)
+    return slab, slab_ids, n_hard

@@ -1,0 +1,148 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract memory / cost / collective analyses.
+
+MUST be run as a module: ``PYTHONPATH=src python -m repro.launch.dryrun
+[--arch qwen2-7b] [--shape train_4k] [--multi-pod] [--json out.json]``.
+The XLA_FLAGS line above precedes every other import (jax locks the device
+count at first init); nothing else in the repo sets it globally.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs.archs import ARCHS, SHAPES, shape_applicable
+from repro.launch import hlo as H
+from repro.launch import hlo_analysis as HA
+from repro.launch import steps as S
+from repro.launch.mesh import make_production_mesh
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             mesh=None, cell_kw: Optional[dict] = None,
+             verbose: bool = True) -> Dict[str, Any]:
+    """Lower+compile one cell; return its roofline record."""
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": why}
+    mesh = mesh if mesh is not None else make_production_mesh(
+        multi_pod=multi_pod)
+    t0 = time.time()
+    cell = S.make_cell(cfg, mesh, shape, **(cell_kw or {}))
+    with mesh:
+        jitted = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
+                         donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    # loop-aware analysis: XLA's cost_analysis counts while (lax.scan)
+    # bodies ONCE; hlo_analysis multiplies by known trip counts.
+    ha = HA.analyze(text)
+    coll = {k.removeprefix("coll_"): v for k, v in ha.items()
+            if k.startswith("coll_")}
+    coll["count"] = ha["collective_count"]
+    coll["total"] = ha["coll_total"]
+    chips = mesh.size
+
+    rec = {
+        "arch": arch, "shape": shape_name, "kind": shape["kind"],
+        "mesh": dict(mesh.shape), "chips": chips, "status": "ok",
+        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+        "capacity": cell.meta.get("capacity"),
+        "exit_layer": cell.meta.get("exit_layer"),
+        "fsdp": cell.meta.get("fsdp"),
+        "flops": ha["flops"],
+        "bytes_accessed": ha["bytes_accessed"],
+        "xla_raw": {"flops": float(cost.get("flops", -1)),
+                    "bytes_accessed": float(cost.get("bytes accessed", -1))},
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                            None),
+        },
+    }
+    # cost_analysis on the host backend reports PER-PROGRAM (per-device)
+    # numbers; whole-job = per-device * chips for the roofline convention.
+    samples = shape["global_batch"]
+    rl = H.Roofline(
+        name=arch, kind=shape["kind"], chips=chips,
+        hlo_flops=rec["flops"] * chips,
+        hlo_bytes=rec["bytes_accessed"] * chips,
+        coll_bytes_per_chip=coll["total"],
+        model_flops=H.model_flops(cfg, shape["kind"], shape["seq_len"],
+                                  shape["global_batch"],
+                                  exit_layer=cell.meta.get("exit_layer")),
+        samples=samples,
+    )
+    rec["roofline"] = rl.as_dict()
+    if verbose:
+        m = rec["memory"]
+        print(f"[{arch} x {shape_name} x {'multi' if multi_pod else 'single'}]"
+              f" ok: lower {t_lower:.1f}s compile {t_compile:.1f}s | "
+              f"args/dev {_gb(m['argument_bytes'])} temp/dev "
+              f"{_gb(m['temp_bytes'])} | t_comp {rl.t_compute:.4f}s t_mem "
+              f"{rl.t_memory:.4f}s t_coll {rl.t_collective:.4f}s -> "
+              f"{rl.bottleneck}-bound, useful-FLOPs {rl.useful_flops_frac:.1%}",
+              flush=True)
+    return rec
+
+
+def _gb(x) -> str:
+    return f"{x / 1e9:.2f}GB" if isinstance(x, (int, float)) else "n/a"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--json", default=None, help="write records to this file")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    records = []
+    failures = 0
+    for mp in meshes:
+        mesh = make_production_mesh(multi_pod=mp)
+        for a in archs:
+            for s in shapes:
+                try:
+                    records.append(run_cell(a, s, multi_pod=mp, mesh=mesh))
+                except Exception:
+                    failures += 1
+                    traceback.print_exc()
+                    records.append({"arch": a, "shape": s,
+                                    "multi_pod": mp, "status": "failed"})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} documented skips, "
+          f"{failures} FAILED")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

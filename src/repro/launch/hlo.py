@@ -1,0 +1,158 @@
+"""HLO text analysis: collective bytes + roofline terms from a compiled
+artifact. No jax device state touched here — safe to import anywhere.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+# TPU v5e hardware constants (per assignment)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one shaped array literal, e.g.  bf16[16,4096,1536]{2,1,0}
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z]*\d*(?:e\dm\d(?:fn)?)?)\[([\d,]*)\]")
+# a collective op line: "%name = <result type> <op>(" — -start variants
+# counted, -done skipped (same transfer)
+_OP_RE = re.compile(
+    r"=\s*(.*?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+_DONE_RE = re.compile(r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)-done\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Bytes per collective kind, summed over ops (OUTPUT shape convention —
+    the payload a chip receives). HLO from compiled.as_text() is already
+    per-device partitioned, so shapes are per-chip."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        if _DONE_RE.search(line):
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        out[m.group(2)] += _shape_bytes(m.group(1))
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclass
+class Roofline:
+    """Three-term roofline for one compiled (arch x shape x mesh) cell.
+    Terms are SECONDS for one step of the lowered program."""
+    name: str
+    kind: str
+    chips: int
+    hlo_flops: float                 # whole-program FLOPs (all chips)
+    hlo_bytes: float                 # whole-program HBM traffic (all chips)
+    coll_bytes_per_chip: float       # per-chip collective payload
+    model_flops: float = 0.0         # 6*N*D useful FLOPs
+    samples: int = 0
+    extra: dict = field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilisation at the roofline bound (the score): useful
+        FLOPs / (chips * peak * bound-time)."""
+        t = self.t_bound
+        return (self.model_flops / (self.chips * PEAK_FLOPS * t)) if t else 0.0
+
+    @property
+    def throughput(self) -> float:
+        return self.samples / self.t_bound if self.t_bound else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "name": self.name, "kind": self.kind, "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "bottleneck": self.bottleneck,
+            "useful_flops_frac": self.useful_flops_frac,
+            "mfu_bound": self.mfu_bound, "samples": self.samples,
+            "throughput": self.throughput, **self.extra,
+        }
+
+
+def model_flops(cfg, kind: str, seq_len: int, batch: int,
+                exit_layer: Optional[int] = None, p: float = 0.25) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) useful-FLOPs convention.
+    train: 6ND. prefill: 2ND. decode: 2N per token. For EE serving cells,
+    stage-2 params count only for the hard fraction p (that IS the paper's
+    saving); for train all layers count (joint loss)."""
+    from repro.core.perf_model import stage_params_bytes
+    n_all = stage_params_bytes(cfg, 0, cfg.n_layers) / 2.0      # param count
+    if cfg.moe:
+        m = cfg.moe
+        # active fraction of expert params
+        e_frac = (m.top_k + m.n_shared) / (m.n_experts + m.n_shared)
+        ep = 3 * cfg.d_model * m.d_ff_expert * (m.n_experts + m.n_shared) \
+            * (cfg.n_layers - cfg.first_k_dense)
+        n_act = n_all - ep * (1 - e_frac)
+    else:
+        n_act = n_all
+    if kind == "train":
+        return 6.0 * n_act * batch * seq_len
+    k = exit_layer if exit_layer is not None else cfg.n_layers // 2
+    n1 = stage_params_bytes(cfg, 0, k) / 2.0
+    n2 = n_all - n1
+    if cfg.moe:
+        n1 *= n_act / n_all
+        n2 *= n_act / n_all
+    tokens = batch * (seq_len if kind == "prefill" else 1)
+    return 2.0 * tokens * (n1 + p * n2)

@@ -1,0 +1,433 @@
+"""While-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` visits every computation ONCE — a
+``lax.scan`` lowered to ``while`` has its body counted a single time, so a
+24-layer scanned transformer under-reports FLOPs by ~24x. The roofline
+report would be meaningless. This module re-derives the three roofline
+inputs (FLOPs, HBM bytes-accessed, collective payload bytes) from the
+post-optimization HLO text with call-graph multipliers:
+
+  * ``while`` bodies/conditions x known trip count (XLA records
+    ``backend_config={"known_trip_count":{"n":...}}``; fallback: the
+    condition's ``compare(LT, constant)`` bound; fallback 1),
+  * ``fusion``/``call``/``conditional`` descend x1,
+  * FLOPs descend into fusion bodies (dots can be fused); bytes are counted
+    at the fusion call site only (operands + outputs — XLA's convention),
+  * collective payloads multiply through loops like everything else.
+
+The text grammar is the stable HLO printer format: one instruction per
+line, ``%name = TYPE opcode(operands), attrs``.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z]*\d*(?:e\dm\d(?:fn)?)?)\[([\d,]*)\]")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# instruction line:   [ROOT] %name = TYPE opcode(...)...
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$")
+# computation header: %name (args) -> type {    /  ENTRY %name (...) ... {
+_COMP_RE = re.compile(r"^\s*(ENTRY\s+)?%([\w\.\-]+)\s*\(.*\{\s*$")
+
+_TRIP_RE = re.compile(r'known_trip_count[^}]*"n":"(\d+)"')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+# opcodes whose operand/output bytes we do NOT charge (pure plumbing)
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "while", "conditional",
+    "call", "custom-call", "copy-start", "copy-done",
+}
+# opcodes that terminate descent for byte accounting (body bytes already
+# represented by the op's own operands/outputs)
+_OPAQUE_FOR_BYTES = {"fusion", "reduce", "sort", "scatter", "map",
+                     "reduce-window", "select-and-scatter", "reduce-scatter",
+                     "all-reduce"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[List[int]]:
+    """All shape literals in a type string as dim lists."""
+    out = []
+    for _dt, dims in _SHAPE_RE.findall(type_str):
+        out.append([int(d) for d in dims.split(",") if d])
+    return out
+
+
+@dataclass
+class Instr:
+    name: str
+    result_type: str
+    opcode: str
+    rest: str                      # operands + attrs (tail of the line)
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)   # instr -> type
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and ("->" in line or mc.group(1)):
+            cur = Computation(name=mc.group(2))
+            comps[cur.name] = cur
+            if mc.group(1):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, rtype, opcode, rest = mi.groups()
+        # operand names: %refs before the first "), " attr boundary
+        paren = rest.split("), ")[0]
+        ops = _OPERAND_RE.findall(paren)
+        ins = Instr(name=name, result_type=rtype, opcode=opcode, rest=rest,
+                    operands=ops)
+        cur.instrs.append(ins)
+        cur.shapes[name] = rtype
+    return comps, entry
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_dims = _shape_dims(ins.result_type)
+    out_n = 1
+    for d in (out_dims[0] if out_dims else []):
+        out_n *= d
+    m = _LHS_C_RE.search(ins.rest)
+    contract = 1
+    if m and ins.operands:
+        lhs_t = comp.shapes.get(ins.operands[0], "")
+        lhs_dims = _shape_dims(lhs_t)
+        if lhs_dims:
+            for i in (int(x) for x in m.group(1).split(",") if x):
+                if i < len(lhs_dims[0]):
+                    contract *= lhs_dims[0][i]
+    return 2.0 * out_n * contract
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    out_dims = _shape_dims(ins.result_type)
+    out_n = 1
+    for d in (out_dims[0] if out_dims else []):
+        out_n *= d
+    if len(ins.operands) < 2:
+        return 0.0
+    rhs_dims = _shape_dims(comp.shapes.get(ins.operands[1], ""))
+    if not rhs_dims:
+        return 0.0
+    # dim_labels ...->..., rhs part between _ and ->, 'o' marks out-channels
+    mo = re.search(r"dim_labels=[^_]+_([\dio]+)->", ins.rest)
+    rhs = rhs_dims[0]
+    k = 1
+    for d in rhs:
+        k *= d
+    if mo:
+        o_pos = mo.group(1).find("o")
+        if 0 <= o_pos < len(rhs) and rhs[o_pos]:
+            k //= rhs[o_pos]
+    return 2.0 * out_n * k
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    coll: Dict[str, float] = field(default_factory=lambda: {
+        k: 0.0 for k in _COLLECTIVES})
+    coll_count: float = 0.0
+
+    def add(self, other: "Costs", mult: float = 1.0,
+            bytes_too: bool = True) -> None:
+        self.flops += other.flops * mult
+        if bytes_too:
+            self.bytes_accessed += other.bytes_accessed * mult
+        for k in _COLLECTIVES:
+            self.coll[k] += other.coll[k] * mult
+        self.coll_count += other.coll_count * mult
+
+
+def _trip_count(ins: Instr, comps: Dict[str, Computation]) -> float:
+    m = _TRIP_RE.search(ins.rest)
+    if m:
+        return float(m.group(1))
+    mc = _COND_RE.search(ins.rest)
+    if mc and mc.group(1) in comps:
+        for ci in comps[mc.group(1)].instrs:
+            if ci.opcode == "constant":
+                mconst = re.search(r"constant\((\d+)\)", "constant(" +
+                                   ci.rest)
+                if mconst:
+                    return float(mconst.group(1))
+    return 1.0
+
+
+def _sliced_param_bytes(callee: Computation) -> Dict[int, int]:
+    """For a fused computation: parameter indices that are consumed ONLY by
+    (dynamic-)slice ops -> the bytes actually read (sum of slice outputs).
+    XLA fuses `dynamic-slice(big)` into consumers; the big operand is
+    address-computed, not streamed."""
+    params: Dict[str, int] = {}
+    for ins in callee.instrs:
+        if ins.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", "parameter(" + ins.rest)
+            if m:
+                params[ins.name] = int(m.group(1))
+    out: Dict[int, int] = {}
+    bad: set = set()
+    for ins in callee.instrs:
+        if ins.opcode == "parameter":
+            continue
+        for o in ins.operands:
+            if o in params:
+                if ins.opcode in ("dynamic-slice", "slice") and \
+                        ins.operands and ins.operands[0] == o:
+                    out[params[o]] = out.get(params[o], 0) + \
+                        _shape_bytes(ins.result_type)
+                else:
+                    bad.add(params[o])
+    return {i: b for i, b in out.items() if i not in bad}
+
+
+def _instr_bytes(ins: Instr, comp: Computation,
+                 comps: Optional[Dict[str, Computation]] = None,
+                 opcode_of: Optional[Dict[str, str]] = None,
+                 loop: bool = False,
+                 tile: int = 0) -> Tuple[float, float]:
+    """(hbm_bytes, vmem_bytes) for one instruction.
+
+    Conventions (documented in EXPERIMENTS.md §Roofline methodology):
+      * (dynamic-)slice / dynamic-update-slice move the WINDOW, not the
+        operand (in-place on TPU) — including slices fused into a kLoop
+        fusion's body (XLA's address-computation fusion);
+      * inside a while body, with a VMEM tile budget: operands/outputs that
+        are loop-INTERNAL intermediates <= tile stay in VMEM (this is what
+        the Pallas kernels enforce with BlockSpecs — flash tiles, online
+        softmax carries); loop INPUTS (parameters / get-tuple-element of
+        the carry) <= tile are loop-resident state (VMEM scratch); big
+        buffers and the slices streamed out of them are HBM traffic.
+    """
+    out_b = _shape_bytes(ins.result_type)
+    if ins.opcode in ("dynamic-slice", "slice"):
+        return 2 * out_b, 0.0
+    if ins.opcode == "dynamic-update-slice":
+        upd = (_shape_bytes(comp.shapes.get(ins.operands[1], ""))
+               if len(ins.operands) > 1 else out_b)
+        return 2 * upd, 0.0
+    sliced: Dict[int, int] = {}
+    dus_out: Optional[int] = None
+    if ins.opcode == "fusion" and comps is not None:
+        m = _CALLS_RE.search(ins.rest)
+        if m and m.group(1) in comps:
+            callee = comps[m.group(1)]
+            sliced = _sliced_param_bytes(callee)
+            # in-place update fusion: root is dynamic-update-slice(param,
+            # update, ...) — traffic is 2x the update window (read-modify-
+            # write, buffer aliased on TPU), not the full buffer.
+            root = callee.instrs[-1] if callee.instrs else None
+            if root is not None and root.opcode == "dynamic-update-slice" \
+                    and len(root.operands) > 1:
+                upd_b = _shape_bytes(callee.shapes.get(root.operands[1], ""))
+                for ci in callee.instrs:
+                    if ci.opcode == "parameter" and ci.name == \
+                            root.operands[0]:
+                        pm = re.search(r"parameter\((\d+)\)",
+                                       "parameter(" + ci.rest)
+                        if pm:
+                            sliced[int(pm.group(1))] = upd_b
+                            dus_out = upd_b
+                        break
+    if dus_out is not None:
+        out_b = dus_out                  # write = the update window
+    if not (loop and tile):
+        b = out_b
+        for idx, o in enumerate(ins.operands):
+            b += sliced.get(idx, _shape_bytes(comp.shapes.get(o, "")))
+        return b, 0.0
+
+    hbm = 0.0
+    vmem = 0.0
+    # output: tile-sized -> VMEM (a consumer or the carry picks it up);
+    # bigger -> HBM write
+    if out_b <= tile:
+        vmem += out_b
+    else:
+        hbm += out_b
+    for idx, o in enumerate(ins.operands):
+        full = _shape_bytes(comp.shapes.get(o, ""))
+        eff = sliced.get(idx, full)
+        src = (opcode_of or {}).get(o, "")
+        external = src in ("parameter", "get-tuple-element")
+        if external and full <= tile:
+            vmem += eff          # loop-resident small state (m/l/acc ...)
+        elif eff <= tile and not external:
+            vmem += eff          # tile intermediate
+        else:
+            hbm += eff           # streamed from HBM (slices of big buffers)
+    return hbm, vmem
+
+
+# TPU VMEM tile model: a while-body instruction whose output and every
+# operand fit in a VMEM tile is kept on-chip by the fused/Pallas hot path
+# (v5e VMEM = 128 MiB; flash tiles are <= a few MiB by construction). Such
+# instructions are charged to VMEM, not HBM. Loop-carried accumulators
+# bigger than the threshold (e.g. remat'd hidden states) stay charged.
+VMEM_TILE_BYTES = 8 * 1024 * 1024
+
+
+def analyze(text: str, breakdown: bool = False,
+            vmem_tile_bytes: int = VMEM_TILE_BYTES) -> Dict[str, float]:
+    """Trip-count-aware totals for one partitioned (per-device) HLO module.
+
+    With ``breakdown=True`` also returns:
+      by_opcode  — {opcode: bytes} at loop-multiplied weight,
+      top        — the 30 single instructions with the largest
+                   bytes x trips (bytes, name, opcode, mult).
+    """
+    comps, entry = parse_module(text)
+    # --- pass 1: total multiplier per computation (flops descend into
+    # fusion bodies; bytes stop at the fusion call site). in_loop marks
+    # computations reached through a while body (VMEM tile rule scope). ----
+    mult_f: Dict[str, float] = {}
+    mult_b: Dict[str, float] = {}
+    in_loop: Dict[str, bool] = {}
+
+    def spread(name: str, mf: float, mb: float, loop: bool,
+               depth: int = 0) -> None:
+        if name not in comps or depth > 64:
+            return
+        mult_f[name] = mult_f.get(name, 0.0) + mf
+        mult_b[name] = mult_b.get(name, 0.0) + mb
+        in_loop[name] = in_loop.get(name, False) or loop
+        for ins in comps[name].instrs:
+            op = ins.opcode
+            if op == "while":
+                trips = _trip_count(ins, comps)
+                for pat in (_BODY_RE, _COND_RE):
+                    m = pat.search(ins.rest)
+                    if m:
+                        spread(m.group(1), mf * trips, mb * trips, True,
+                               depth + 1)
+            elif op == "fusion":
+                m = _CALLS_RE.search(ins.rest)
+                if m:
+                    spread(m.group(1), mf, 0.0, loop, depth + 1)
+            elif op in ("call", "async-start", "custom-call"):
+                m = _TO_APPLY_RE.search(ins.rest) or _CALLS_RE.search(ins.rest)
+                if m:
+                    spread(m.group(1), mf, mb, loop, depth + 1)
+            elif op == "conditional":
+                mbr = _BRANCHES_RE.search(ins.rest)
+                if mbr:
+                    for b in _OPERAND_RE.findall(mbr.group(1)):
+                        spread(b, mf, mb, loop, depth + 1)
+            elif op in ("reduce", "sort", "scatter", "map", "reduce-window",
+                        "select-and-scatter", "reduce-scatter", "all-reduce"):
+                m = _TO_APPLY_RE.search(ins.rest)
+                if m:
+                    spread(m.group(1), mf, 0.0, loop, depth + 1)
+
+    if entry:
+        spread(entry, 1.0, 1.0, False)
+
+    # --- pass 2: flat weighted sums over instructions -----------------------
+    total = Costs()
+    vmem_bytes = 0.0
+    by_opcode: Dict[str, float] = {}
+    top: List[Tuple[float, str, str, float]] = []
+    for cname, comp in comps.items():
+        mf = mult_f.get(cname, 0.0)
+        mb = mult_b.get(cname, 0.0)
+        loop = in_loop.get(cname, False)
+        if mf == 0.0 and mb == 0.0:
+            continue
+        opcode_of = {i.name: i.opcode for i in comp.instrs}
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "dot":
+                total.flops += mf * _dot_flops(ins, comp)
+            elif op == "convolution":
+                total.flops += mf * _conv_flops(ins, comp)
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                total.coll[base] += mf * _shape_bytes(ins.result_type)
+                total.coll_count += mf
+            if mb > 0.0 and op not in _FREE_OPS:
+                hbm, vmem = _instr_bytes(ins, comp, comps, opcode_of,
+                                         loop=loop, tile=vmem_tile_bytes)
+                vmem_bytes += mb * vmem
+                if hbm == 0.0:
+                    continue
+                total.bytes_accessed += mb * hbm
+                if breakdown:
+                    by_opcode[op] = by_opcode.get(op, 0.0) + mb * hbm
+                    top.append((mb * hbm, ins.name, op, mb))
+
+    out = {
+        "flops": total.flops,
+        "bytes_accessed": total.bytes_accessed,
+        "vmem_bytes": vmem_bytes,
+        "collective_count": total.coll_count,
+    }
+    if breakdown:
+        out["by_opcode"] = dict(sorted(by_opcode.items(),
+                                       key=lambda kv: -kv[1]))
+        out["top"] = sorted(top, reverse=True)[:30]
+    for k in _COLLECTIVES:
+        out[f"coll_{k}"] = total.coll[k]
+    out["coll_total"] = sum(total.coll[k] for k in _COLLECTIVES)
+    return out
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Back-compat shim matching launch.hlo.collective_bytes's shape, but
+    loop-aware."""
+    a = analyze(hlo_text)
+    out = {k: a[f"coll_{k}"] for k in _COLLECTIVES}
+    out["count"] = a["collective_count"]
+    out["total"] = a["coll_total"]
+    return out

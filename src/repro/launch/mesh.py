@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; only launch/dryrun.py forces the 512 host-device platform.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Arbitrary mesh (degraded/elastic shapes, e.g. (15, 16))."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def batch_axes(mesh) -> Tuple[str, ...]:
+    """Axes the global batch shards over: ('pod','data') when a pod axis
+    exists, else ('data',)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1

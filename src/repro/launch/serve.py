@@ -1,0 +1,56 @@
+"""Serving driver: ``PYTHONPATH=src python -m repro.launch.serve
+--arch qwen2-1.5b --smoke --requests 256``.
+
+Builds the two-stage EE server (stage 1 full rate, stage 2 bucketed at
+capacity = ceil((p+slack)·B)), pushes batched requests with a controlled
+hard-fraction q, and reports throughput + stage-2 occupancy — the runtime
+half of the ATHEENA pipeline."""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core import early_exit as ee
+from repro.core.stage_mesh import stage2_capacity
+from repro.models.registry import get_arch, get_smoke, list_archs
+from repro.runtime import serve_loop as SL
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=list_archs())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--p", type=float, default=0.25,
+                    help="design-time hard probability (sizes stage 2)")
+    ap.add_argument("--c-thr", type=float, default=0.9)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
+    spec = ee.default_spec(cfg, c_thr=args.c_thr)
+    params = ee.init_ee_params(jax.random.PRNGKey(0), cfg, spec)
+    cap = stage2_capacity(args.batch, args.p)
+    server = SL.build_server(params, cfg, spec,
+                             SL.ServeConfig(capacity=cap, c_thr=args.c_thr))
+
+    toks = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (args.requests, args.seq), 0, cfg.vocab))
+    t0 = time.perf_counter()
+    results = SL.serve_dataset(server, toks, batch=args.batch)
+    dt = time.perf_counter() - t0
+    assert len(results) == args.requests
+    stats = server.stats.as_dict()
+    print(json.dumps({"arch": args.arch, "capacity": cap,
+                      "throughput_samples_per_s": args.requests / dt,
+                      **stats}, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,205 @@
+"""Divisibility-aware sharding planner.
+
+Maps every parameter / optimizer / cache / input leaf to a PartitionSpec on
+the production mesh, by leaf NAME (the einsum role decides the axis) with a
+hard divisibility check against the actual leaf SHAPE — jax rejects uneven
+shards, and several assigned configs have awkward dims (vocab 50280/92553/
+256206 not % 16; grok has 8 experts on a 16-way model axis), so every rule
+carries an explicit fallback chain:
+
+  column-parallel (d -> X projections)   last dim over "model"
+  row-parallel    (X -> d projections)   dim -2 over "model"
+  embedding table (V, d)                 V over "model", else REPLICATE
+                                         (replicated table beats d-sharding:
+                                         d is the unembed contraction, and
+                                         sharding it would all-reduce the
+                                         (B,S,V) fp32 logits every step)
+  MoE experts (E, d, f)                  E over "model" (true EP), else the
+                                         ff dim (expert-sliced TP — grok)
+  norms / scalars / router               replicated
+  FSDP (opt-in)                          additionally shard the largest
+                                         remaining dim over "data"
+
+Leading scan (layer-stack) dims are never sharded.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_size, batch_axes
+from repro.models.config import ArchConfig
+
+# leaf-name roles ------------------------------------------------------------
+_COL = {"wq", "wk", "wv", "wi", "wi_gate", "wi_up", "w_in", "w_x",
+        "w_in_gate", "w_gate", "w_rec_gate", "w_dkv", "w_uk", "w_uv",
+        "head", "bq", "bk", "bv", "conv_w", "conv_b"}
+_ROW = {"wo", "w_out"}
+_MOE = {"e_gate", "e_up", "e_down"}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "name"):
+            return str(entry.name)
+    return ""
+
+
+def _n_scan_dims(path) -> int:
+    """blocks[...] stacks carry one leading layer dim."""
+    s = jax.tree_util.keystr(path)
+    return 1 if s.startswith("['blocks']") or "['backbone']['blocks']" in s \
+        or "['encoder']['blocks']" in s else 0
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def param_spec(path, shape: Tuple[int, ...], mesh, *, fsdp: bool = False
+               ) -> P:
+    """PartitionSpec for one parameter leaf."""
+    m = axis_size(mesh, "model")
+    d = axis_size(mesh, "data")
+    name = _leaf_name(path)
+    lead = _n_scan_dims(path)
+    nd = len(shape)
+    parts: list = [None] * nd
+
+    def assign(axis_idx: int, mesh_axis: str, size: int) -> bool:
+        i = axis_idx if axis_idx >= 0 else nd + axis_idx
+        if i >= lead and parts[i] is None and _div(shape[i], size):
+            parts[i] = mesh_axis
+            return True
+        return False
+
+    if name == "table":                      # embedding (V, d)
+        assign(-2, "model", m)               # else replicate (see module doc)
+    elif name in _MOE and nd - lead == 3:    # (E, d|f, f|d)
+        if not assign(-3, "model", m):       # true expert parallel
+            # expert-sliced TP: shard the ff dim (dim -1 for gate/up, -2 down)
+            assign(-1 if name != "e_down" else -2, "model", m)
+    elif name in _COL and nd - lead >= 1:
+        assign(-1, "model", m)
+    elif name in _ROW and nd - lead >= 2:
+        assign(-2, "model", m)
+    # else: replicate (norm scales, router, A_log, Lambda, ...)
+
+    if fsdp:
+        # shard the largest remaining dim over "data" (ZeRO-3-style layout)
+        cands = [(shape[i], i) for i in range(lead, nd)
+                 if parts[i] is None and _div(shape[i], d) and shape[i] >= d]
+        if cands:
+            parts[max(cands)[1]] = "data"
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_shardings(cfg: ArchConfig, mesh, shapes, *, fsdp: bool = False):
+    """NamedSharding pytree matching a param-shape pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    out = [NamedSharding(mesh, param_spec(p, leaf.shape, mesh, fsdp=fsdp))
+           for p, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def auto_fsdp(cfg: ArchConfig, shapes, mesh, *, hbm_budget_gb: float = 8.0
+              ) -> bool:
+    """Enable FSDP when TP-only params exceed the per-chip budget."""
+    m = axis_size(mesh, "model")
+    total = sum(leaf.size * jnp.dtype(leaf.dtype).itemsize
+                for leaf in jax.tree.leaves(shapes))
+    return (total / m) / 1e9 > hbm_budget_gb
+
+
+# -- optimizer state (ZeRO-1) -------------------------------------------------
+
+def opt_shardings(cfg: ArchConfig, mesh, param_shapes_tree, *,
+                  fsdp: bool = False):
+    """AdamWState sharding: moments take the param spec with the largest
+    remaining dim additionally sharded over 'data' (ZeRO-1)."""
+    from repro.optim.adamw import AdamWState
+
+    d = axis_size(mesh, "data")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_shapes_tree)
+
+    def moment(path, leaf):
+        spec = param_spec(path, leaf.shape, mesh, fsdp=fsdp)
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        lead = _n_scan_dims(path)
+        if "data" not in parts:
+            cands = [(leaf.shape[i], i) for i in range(lead, len(parts))
+                     if parts[i] is None and _div(leaf.shape[i], d)
+                     and leaf.shape[i] >= d]
+            if cands:
+                parts[max(cands)[1]] = "data"
+        return NamedSharding(mesh, P(*parts))
+
+    m_sh = jax.tree_util.tree_unflatten(
+        treedef, [moment(p, l) for p, l in flat])
+    return AdamWState(step=NamedSharding(mesh, P()), m=m_sh, v=m_sh, err=None)
+
+
+# -- inputs / caches -----------------------------------------------------------
+
+def batch_spec(mesh, global_batch: int) -> Tuple[str, ...]:
+    """Largest prefix of ('pod','data') that divides the batch."""
+    axes = batch_axes(mesh)
+    while axes:
+        if _div(global_batch, int(
+                jnp.prod(jnp.array([axis_size(mesh, a) for a in axes])))):
+            return axes
+        axes = axes[:-1]
+    return ()
+
+
+def token_sharding(mesh, global_batch: int) -> NamedSharding:
+    bspec = batch_spec(mesh, global_batch)
+    return NamedSharding(mesh, P(bspec if bspec else None, None))
+
+
+def cache_shardings(cfg: ArchConfig, mesh, cache_shapes_tree):
+    """Decode-cache sharding: batch over ('pod','data') when divisible; the
+    cache TIME axis over 'model' (sequence-parallel cache — softmax stats
+    all-reduce over model, the standard long-context decode layout). MLA
+    latent/rope and recurrent states follow the same batch rule."""
+    m = axis_size(mesh, "model")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes_tree)
+
+    def one(path, leaf):
+        if leaf is None:
+            return None
+        name = _leaf_name(path)
+        lead = 1 if "['blocks']" in jax.tree_util.keystr(path) else 0
+        shape = leaf.shape
+        nd = len(shape)
+        parts: list = [None] * nd
+        bdim = lead          # batch dim position
+        bspec = batch_spec(mesh, shape[bdim]) if bdim < nd else ()
+        if bspec:
+            parts[bdim] = bspec
+        # time axis: k/v -> -3; latent/k_rope/xk/xv -> -2
+        tdim = None
+        if name in ("k", "v", "xk", "xv"):
+            tdim = nd - 3
+        elif name in ("latent", "k_rope"):
+            tdim = nd - 2
+        if tdim is not None and tdim > bdim and _div(shape[tdim], m):
+            parts[tdim] = "model"
+        while parts and parts[-1] is None:
+            parts.pop()
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_unflatten(treedef,
+                                        [one(p, l) for p, l in flat])
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

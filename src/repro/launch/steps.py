@@ -1,0 +1,214 @@
+"""Step builders + abstract input specs for every (arch x shape) cell.
+
+One cell = (ArchConfig, shape kind) -> a jittable step function plus the
+ShapeDtypeStruct stand-ins and NamedShardings for all its inputs. The SAME
+builders power the real drivers (launch/train.py, launch/serve.py) and the
+dry-run (launch/dryrun.py): what compiles in the dry-run is what runs.
+
+Cell kinds:
+  train    — EE joint-loss train step (fwd+bwd+AdamW, remat'd scan)
+  prefill  — the full ATHEENA pipeline in one program: stage 1 -> exit
+             decision -> conditional-buffer compaction -> stage 2 on the
+             hard slab -> exit merge (core/early_exit.serve_batch)
+  decode   — one token: stage 1 for the whole request batch, exit decision,
+             stage 2 only for the persistent hard bucket (capacity = the
+             conditional-buffer size from p)
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import conditional as cond
+from repro.core import early_exit as ee
+from repro.core import exit_decision as ed
+from repro.core.stage_mesh import stage2_capacity
+from repro.core import losses
+from repro.launch import shardings as sh
+from repro.models import hints
+from repro.models import transformer as T
+from repro.models.config import ArchConfig
+from repro.optim import adamw
+
+PAPER_P = 0.25          # design-time hard-sample probability (paper §IV-A)
+
+
+@dataclass
+class Cell:
+    """Everything the dry-run / driver needs for one (arch x shape)."""
+    name: str
+    kind: str
+    step_fn: Callable
+    args: Tuple[Any, ...]               # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    donate: Tuple[int, ...] = ()
+    meta: Dict[str, Any] = None
+
+
+# ---------------------------------------------------------------------------
+# frontend stubs
+# ---------------------------------------------------------------------------
+
+def frontend_len(cfg: ArchConfig, seq_len: int) -> int:
+    if cfg.frontend == "vit_stub":
+        return cfg.n_frontend_tokens
+    if cfg.encdec:
+        return min(seq_len, 4096)       # audio frames (stubbed frontend)
+    return 0
+
+
+def _frontend_struct(cfg: ArchConfig, batch: int, seq_len: int):
+    n = frontend_len(cfg, seq_len)
+    if n == 0:
+        return None
+    return jax.ShapeDtypeStruct((batch, n, cfg.d_model), cfg.act_dtype())
+
+
+# ---------------------------------------------------------------------------
+# train cell
+# ---------------------------------------------------------------------------
+
+def make_train_cell(cfg: ArchConfig, mesh, *, seq_len: int, global_batch: int,
+                    spec: Optional[ee.EarlyExitSpec] = None,
+                    opt: Optional[adamw.AdamWConfig] = None,
+                    fsdp: Optional[bool] = None) -> Cell:
+    hints.set_mesh(mesh)
+    spec = spec or ee.default_spec(cfg)
+    opt = opt or adamw.AdamWConfig()
+    p_shapes = ee.ee_param_shapes(cfg, spec)
+    if fsdp is None:
+        fsdp = sh.auto_fsdp(cfg, p_shapes, mesh)
+    p_sh = sh.param_shardings(cfg, mesh, p_shapes, fsdp=fsdp)
+    o_shapes = jax.eval_shape(functools.partial(adamw.init, opt), p_shapes)
+    o_sh = sh.opt_shardings(cfg, mesh, p_shapes, fsdp=fsdp)
+    tok_sh = sh.token_sharding(mesh, global_batch)
+    fe = _frontend_struct(cfg, global_batch, seq_len)
+
+    def loss_fn(params, tokens, labels, frontend):
+        eh, fh, aux = ee.forward_train(params, cfg, spec, tokens,
+                                       frontend_embeds=frontend)
+        loss, parts = losses.branchynet_joint_loss(
+            params, cfg, eh, fh, labels, spec.loss_weights, aux=aux)
+        return loss, parts
+
+    def train_step(params, opt_state, tokens, labels, frontend=None):
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, tokens, labels, frontend)
+        params, opt_state, om = adamw.update(opt, opt_state, params, grads)
+        return params, opt_state, {"loss": loss, **parts, **om}
+
+    tok = jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)
+    args = [p_shapes, o_shapes, tok, tok]
+    shards = [p_sh, o_sh, tok_sh, tok_sh]
+    if fe is not None:
+        args.append(fe)
+        shards.append(NamedSharding(
+            mesh, P(sh.batch_spec(mesh, global_batch) or None, None, None)))
+    return Cell(name=cfg.name, kind="train", step_fn=train_step,
+                args=tuple(args), in_shardings=tuple(shards),
+                donate=(0, 1), meta={"fsdp": fsdp, "exit_layer": spec.exit_layer})
+
+
+# ---------------------------------------------------------------------------
+# prefill cell — the one-program ATHEENA pipeline
+# ---------------------------------------------------------------------------
+
+def make_prefill_cell(cfg: ArchConfig, mesh, *, seq_len: int,
+                      global_batch: int, p: float = PAPER_P,
+                      spec: Optional[ee.EarlyExitSpec] = None,
+                      fsdp: Optional[bool] = None) -> Cell:
+    hints.set_mesh(mesh)
+    spec = spec or ee.default_spec(cfg)
+    p_shapes = ee.ee_param_shapes(cfg, spec)
+    if fsdp is None:
+        fsdp = sh.auto_fsdp(cfg, p_shapes, mesh)
+    p_sh = sh.param_shardings(cfg, mesh, p_shapes, fsdp=fsdp)
+    tok_sh = sh.token_sharding(mesh, global_batch)
+    capacity = stage2_capacity(global_batch, p)
+    fe = _frontend_struct(cfg, global_batch, seq_len)
+
+    def serve_prefill(params, tokens, frontend=None):
+        out = ee.serve_batch(params, cfg, spec, tokens, capacity=capacity,
+                             frontend_embeds=frontend)
+        return {"logits": out["logits"], "exit_mask": out["exit_mask"],
+                "n_hard": out["n_hard"], "overflow": out["overflow"]}
+
+    tok = jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)
+    args = [p_shapes, tok]
+    shards = [p_sh, tok_sh]
+    if fe is not None:
+        args.append(fe)
+        shards.append(NamedSharding(
+            mesh, P(sh.batch_spec(mesh, global_batch) or None, None, None)))
+    return Cell(name=cfg.name, kind="prefill", step_fn=serve_prefill,
+                args=tuple(args), in_shardings=tuple(shards),
+                meta={"fsdp": fsdp, "capacity": capacity,
+                      "exit_layer": spec.exit_layer})
+
+
+# ---------------------------------------------------------------------------
+# decode cell — stage 1 full batch + stage 2 hard bucket
+# ---------------------------------------------------------------------------
+
+def make_decode_cell(cfg: ArchConfig, mesh, *, seq_len: int,
+                     global_batch: int, p: float = PAPER_P,
+                     spec: Optional[ee.EarlyExitSpec] = None,
+                     fsdp: Optional[bool] = None) -> Cell:
+    hints.set_mesh(mesh)
+    spec = spec or ee.default_spec(cfg)
+    p_shapes = ee.ee_param_shapes(cfg, spec)
+    if fsdp is None:
+        fsdp = sh.auto_fsdp(cfg, p_shapes, mesh)
+    p_sh = sh.param_shardings(cfg, mesh, p_shapes, fsdp=fsdp)
+    B = global_batch
+    C = stage2_capacity(B, p) if B > 1 else 1
+    xlen = frontend_len(cfg, seq_len) if cfg.encdec else 0
+
+    c_full_b = T.cache_shapes(cfg, B, seq_len, xlen)
+    s1_shapes, _ = ee.split_caches(cfg, spec, c_full_b)
+    c_full_c = T.cache_shapes(cfg, C, seq_len, xlen)
+    _, s2_shapes = ee.split_caches(cfg, spec, c_full_c)
+    s1_sh = sh.cache_shardings(cfg, mesh, s1_shapes)
+    s2_sh = sh.cache_shardings(cfg, mesh, s2_shapes)
+
+    def serve_decode(params, tok_b, caches1, slab_idx, caches2, step):
+        """One decode step of the two-stage pipeline. ``slab_idx`` is the
+        admission-time hard-bucket assignment (request -> slab slot)."""
+        h, nc1, exit_logits = ee.stage1_decode(params, cfg, spec, tok_b,
+                                               caches1, step)
+        exit_mask, pred, conf = ed.decision_and_argmax(exit_logits, spec.c_thr)
+        h_slab = jnp.take(h, slab_idx, axis=0)            # (C, 1, d)
+        final_logits, nc2 = ee.stage2_decode(params, cfg, spec, h_slab,
+                                             caches2, step)
+        return ({"exit_logits": exit_logits, "exit_mask": exit_mask,
+                 "final_logits": final_logits}, nc1, nc2)
+
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    idx = jax.ShapeDtypeStruct((C,), jnp.int32)
+    step_s = jax.ShapeDtypeStruct((), jnp.int32)
+    args = (p_shapes, tok, s1_shapes, idx, s2_shapes, step_s)
+    shards = (p_sh, sh.token_sharding(mesh, B), s1_sh,
+              sh.replicated(mesh), s2_sh, sh.replicated(mesh))
+    return Cell(name=cfg.name, kind="decode", step_fn=serve_decode,
+                args=args, in_shardings=shards, donate=(2, 4),
+                meta={"fsdp": fsdp, "capacity": C,
+                      "exit_layer": spec.exit_layer})
+
+
+def make_cell(cfg: ArchConfig, mesh, shape: Dict[str, Any], **kw) -> Cell:
+    kind = shape["kind"]
+    if kind == "train":
+        return make_train_cell(cfg, mesh, seq_len=shape["seq_len"],
+                               global_batch=shape["global_batch"], **kw)
+    if kind == "prefill":
+        return make_prefill_cell(cfg, mesh, seq_len=shape["seq_len"],
+                                 global_batch=shape["global_batch"], **kw)
+    if kind == "decode":
+        return make_decode_cell(cfg, mesh, seq_len=shape["seq_len"],
+                                global_batch=shape["global_batch"], **kw)
+    raise ValueError(kind)

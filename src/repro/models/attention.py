@@ -1,0 +1,218 @@
+"""Attention blocks: GQA/MQA (+bias, +qk_norm, sliding window) and KV caches."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import hints
+from repro.models.config import ArchConfig
+from repro.models.layers import (apply_rope, blocked_attention, decode_attention,
+                                 dense_init, init_rmsnorm, rmsnorm)
+
+
+def attention_core(q, k, v, *, causal: bool, window: Optional[int],
+                   softcap: Optional[float], use_kernel: bool = False):
+    """Dispatch: sequence-parallel shard_map attention when the ambient mesh
+    supports it (beyond-paper optimization — each device computes S/TP query
+    rows with ALL heads local, K/V gathered once; removes the per-block
+    all-reduce XLA emits when head counts don't divide the model axis),
+    else the plain blocked path.
+
+    ``use_kernel``: route the per-shard computation through the Pallas flash
+    kernel (serving paths — the kernel has no VJP; training keeps the
+    differentiable jnp block scan). softcap archs stay on the jnp path."""
+    split = hints.attn_split(q.shape[1], q.shape[0])
+    if split is None or q.shape[1] != k.shape[1]:
+        return blocked_attention(q, k, v, causal=causal, window=window,
+                                 softcap=softcap)
+    kind, baxes = split
+    mesh = hints.mesh()
+    kernel_ok = use_kernel and softcap is None and causal
+
+    def kern(q_l, k_l, v_l, off):
+        if kernel_ok:
+            from repro.kernels.flash_attention.kernel import \
+                flash_attention_pallas
+            o = flash_attention_pallas(
+                q_l.transpose(0, 2, 1, 3), k_l.transpose(0, 2, 1, 3),
+                v_l.transpose(0, 2, 1, 3), off, causal=True, window=window,
+                interpret=jax.default_backend() == "cpu")
+            return o.transpose(0, 2, 1, 3)
+        if softcap is None:
+            # custom-VJP flash: backward recomputes p-blocks instead of
+            # stacking them as AD residuals (the dominant train HBM term)
+            from repro.models.layers import flash_attention_diff
+            return flash_attention_diff(q_l, k_l, v_l, off, causal, window)
+        return blocked_attention(q_l, k_l, v_l, causal=causal, window=window,
+                                 softcap=softcap, q_offset=off)
+
+    if kind == "batch":
+        # whole sequences per device, batch over (baxes + model): no K/V
+        # comm at all, per-sample VMEM tiles (training decomposition)
+        bspec = (*baxes, "model")
+        spec = P(bspec, None, None, None)
+        return jax.shard_map(
+            lambda a, b, c: kern(a, b, c, 0), mesh=mesh,
+            in_specs=(spec, spec, spec), out_specs=spec,
+            check_vma=False)(q, k, v)
+
+    # sequence-parallel: q rows sharded over model, K/V whole (long prefill)
+    axis = "model"
+    s_local = q.shape[1] // mesh.shape[axis]
+    bspec = baxes if baxes else None
+    return jax.shard_map(
+        lambda a, b, c: kern(a, b, c, jax.lax.axis_index(axis) * s_local),
+        mesh=mesh,
+        in_specs=(P(bspec, axis, None, None), P(bspec, None, None, None),
+                  P(bspec, None, None, None)),
+        out_specs=P(bspec, axis, None, None),
+        check_vma=False,
+    )(q, k, v)
+
+
+def init_attention(key, cfg: ArchConfig) -> dict:
+    d, H, KH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = cfg.p_dtype()
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd), dt),
+        "wk": dense_init(ks[1], (d, KH * hd), dt),
+        "wv": dense_init(ks[2], (d, KH * hd), dt),
+        "wo": dense_init(ks[3], (H * hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((KH * hd,), dt)
+        p["bv"] = jnp.zeros((KH * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dt)
+        p["k_norm"] = init_rmsnorm(hd, dt)
+    return p
+
+
+def _project_qkv(params, cfg: ArchConfig, x, positions):
+    B, S, _ = x.shape
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,de->bse", x, params["wq"])
+    k = jnp.einsum("bsd,de->bse", x, params["wk"])
+    v = jnp.einsum("bsd,de->bse", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KH, hd)
+    v = v.reshape(B, S, KH, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_fwd(params, cfg: ArchConfig, x, *, window: Optional[int] = None,
+                  causal: bool = True, positions=None,
+                  kv: Optional[tuple] = None, use_kernel: bool = False):
+    """Full-sequence attention (training / prefill).
+
+    x: (B, S, d_model). ``kv`` overrides self-attention K/V inputs for
+    cross-attention: a tuple (k_src, v_src) already shaped (B, Sk, KH, hd).
+    Returns (out, (k, v)) so prefill can retain the cache.
+    """
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :].astype(jnp.int32)
+    if kv is None:
+        q, k, v = _project_qkv(params, cfg, x, positions)
+    else:
+        H, hd = cfg.n_heads, cfg.resolved_head_dim
+        q = jnp.einsum("bsd,de->bse", x, params["wq"])
+        if cfg.qkv_bias:
+            q = q + params["bq"]
+        q = q.reshape(B, S, H, hd)
+        if cfg.qk_norm:
+            q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k, v = kv
+        causal = False
+    out = attention_core(q, k, v, causal=causal, window=window,
+                         softcap=cfg.logit_softcap, use_kernel=use_kernel)
+    out = jnp.einsum("bse,ed->bsd", out.reshape(B, S, -1), params["wo"])
+    return out, (k, v)
+
+
+def cross_kv(params, cfg: ArchConfig, memory):
+    """Project encoder memory to (k, v) once for cross-attention reuse."""
+    B, Sk, _ = memory.shape
+    KH, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    k = jnp.einsum("bsd,de->bse", memory, params["wk"])
+    v = jnp.einsum("bsd,de->bse", memory, params["wv"])
+    if cfg.qkv_bias:
+        k = k + params["bk"]
+        v = v + params["bv"]
+    k = k.reshape(B, Sk, KH, hd)
+    v = v.reshape(B, Sk, KH, hd)
+    if cfg.qk_norm:
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    return k, v
+
+
+# ----------------------------------------------------------------------------
+# KV cache (decode)
+# ----------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, window: Optional[int] = None):
+    """Cache arrays for ONE attention layer. Windowed layers allocate only
+    the window (ring buffer)."""
+    KH, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    L = min(max_len, window) if window else max_len
+    dt = cfg.act_dtype()
+    return {
+        "k": jnp.zeros((batch, L, KH, hd), dt),
+        "v": jnp.zeros((batch, L, KH, hd), dt),
+    }
+
+
+def attention_decode(params, cfg: ArchConfig, x, cache, step, *,
+                     window: Optional[int] = None):
+    """One-token decode. x: (B, 1, d). cache: this layer's {k,v}.
+    step: scalar int32 — current absolute position. Returns (out, new_cache)."""
+    B = x.shape[0]
+    H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    pos = jnp.full((B, 1), step, jnp.int32)
+    q, k, v = _project_qkv(params, cfg, x, pos)
+    q = q[:, 0]                                    # (B, H, hd)
+    L = cache["k"].shape[1]
+    slot = (step % L) if window else step
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    if window:
+        # ring buffer: all L slots valid once step >= L; positions are implicit.
+        n_valid = jnp.minimum(step + 1, L)
+        # Reconstruct per-slot absolute positions for masking:
+        # slot i holds position step - ((slot - i) mod L)
+        idx = jnp.arange(L)
+        abs_pos = step - ((slot - idx) % L)
+        valid = (abs_pos >= 0) & (abs_pos <= step) & (abs_pos > step - L)
+        s_mask_len = jnp.where(valid, 1, 0)
+        del n_valid, s_mask_len
+        B_, Smax, KH_, D_ = k_cache.shape
+        G = H // KH
+        qf = q.reshape(B, KH, G, hd).astype(jnp.float32)
+        s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32)) / jnp.sqrt(
+            jnp.array(hd, jnp.float32))
+        if cfg.logit_softcap is not None:
+            s = cfg.logit_softcap * jnp.tanh(s / cfg.logit_softcap)
+        s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+        out = out.reshape(B, H, hd).astype(x.dtype)
+    else:
+        cache_len = jnp.full((B,), step + 1, jnp.int32)
+        out = decode_attention(q, k_cache, v_cache, cache_len,
+                               softcap=cfg.logit_softcap)
+    out = jnp.einsum("be,ed->bd", out.reshape(B, -1), params["wo"])
+    return out[:, None, :], {"k": k_cache, "v": v_cache}

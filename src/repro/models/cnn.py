@@ -1,0 +1,228 @@
+"""The paper's own benchmark networks, in JAX.
+
+B-LeNet is the modified Branchy-LeNet of ATHEENA Fig. 8 (5x5 convs, maxpool
+moved before conv, exit-1 after the first conv stage with one extra conv +
+linear). B-AlexNet follows BranchyNet's CIFAR-10 AlexNet variant with one
+early exit; Triple-Wins LeNet follows Hu et al. (ICLR'20) with its first
+exit. Backbone-only versions (no exits) are the paper's baselines.
+
+These are small enough to *run* (train + profile + serve) on CPU in this
+container, which is how we validate the toolflow end-to-end against the
+paper's claims.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+@dataclass(frozen=True)
+class CNNStage:
+    """A chunk of backbone between exit points."""
+    convs: Tuple[dict, ...]      # [{out, kernel, stride, pool}] per conv
+    flatten: bool = False
+    linear: Tuple[int, ...] = ()
+
+
+@dataclass(frozen=True)
+class CNNExit:
+    convs: Tuple[dict, ...]
+    linear: Tuple[int, ...]      # hidden dims; final classes appended
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    in_shape: Tuple[int, int, int]          # (H, W, C)
+    n_classes: int
+    stages: Tuple[CNNStage, ...]
+    exits: Tuple[CNNExit, ...]              # len == len(stages) - 1
+    dtype: str = "float32"
+
+
+def _conv_init(key, k, cin, cout, dtype):
+    return {
+        "w": dense_init(key, (k, k, cin, cout), dtype, scale=(1.0 / (k * k * cin)) ** 0.5),
+        "b": jnp.zeros((cout,), dtype),
+    }
+
+
+def _conv(p, x, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _maxpool(x, k=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+def _stage_out_shape(cfg: CNNConfig, upto: int) -> Tuple[int, int, int]:
+    h, w, c = cfg.in_shape
+    for st in cfg.stages[:upto]:
+        for cv in st.convs:
+            s = cv.get("stride", 1)
+            h, w = -(-h // s), -(-w // s)
+            if cv.get("pool"):
+                h, w = h // cv["pool"], w // cv["pool"]
+            c = cv["out"]
+    return h, w, c
+
+
+def init_cnn(key, cfg: CNNConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    params = {"stages": [], "exits": []}
+    h, w, c = cfg.in_shape
+    for si, st in enumerate(cfg.stages):
+        sp = {"convs": [], "linear": []}
+        for ci, cv in enumerate(st.convs):
+            kk = jax.random.fold_in(key, si * 100 + ci)
+            sp["convs"].append(_conv_init(kk, cv["kernel"], c, cv["out"], dt))
+            s = cv.get("stride", 1)
+            h, w = -(-h // s), -(-w // s)
+            if cv.get("pool"):
+                h, w = h // cv["pool"], w // cv["pool"]
+            c = cv["out"]
+        feat = h * w * c
+        if st.flatten:
+            dims = list(st.linear) + ([cfg.n_classes] if si == len(cfg.stages) - 1 else [])
+            din = feat
+            for li, dout in enumerate(dims):
+                kk = jax.random.fold_in(key, 9000 + si * 100 + li)
+                sp["linear"].append({"w": dense_init(kk, (din, dout), dt),
+                                     "b": jnp.zeros((dout,), dt)})
+                din = dout
+        params["stages"].append(sp)
+
+    for ei, ex in enumerate(cfg.exits):
+        eh, ew, ec = _stage_out_shape(cfg, ei + 1)
+        ep = {"convs": [], "linear": []}
+        cc = ec
+        for ci, cv in enumerate(ex.convs):
+            kk = jax.random.fold_in(key, 5000 + ei * 100 + ci)
+            ep["convs"].append(_conv_init(kk, cv["kernel"], cc, cv["out"], dt))
+            s = cv.get("stride", 1)
+            eh, ew = -(-eh // s), -(-ew // s)
+            if cv.get("pool"):
+                eh, ew = eh // cv["pool"], ew // cv["pool"]
+            cc = cv["out"]
+        din = eh * ew * cc
+        for li, dout in enumerate(list(ex.linear) + [cfg.n_classes]):
+            kk = jax.random.fold_in(key, 7000 + ei * 100 + li)
+            ep["linear"].append({"w": dense_init(kk, (din, dout), dt),
+                                 "b": jnp.zeros((dout,), dt)})
+            din = dout
+        params["exits"].append(ep)
+    return params
+
+
+def run_stage(params, cfg: CNNConfig, si: int, x):
+    st = cfg.stages[si]
+    sp = params["stages"][si]
+    for cv, p in zip(st.convs, sp["convs"]):
+        x = _conv(p, x, cv.get("stride", 1))
+        x = jax.nn.relu(x)
+        if cv.get("pool"):
+            x = _maxpool(x, cv["pool"])
+    if st.flatten:
+        x = x.reshape(x.shape[0], -1)
+        for li, p in enumerate(sp["linear"]):
+            x = x @ p["w"] + p["b"]
+            if li < len(sp["linear"]) - 1:
+                x = jax.nn.relu(x)
+    return x
+
+
+def run_exit(params, cfg: CNNConfig, ei: int, x):
+    ex = cfg.exits[ei]
+    ep = params["exits"][ei]
+    for cv, p in zip(ex.convs, ep["convs"]):
+        x = _conv(p, x, cv.get("stride", 1))
+        x = jax.nn.relu(x)
+        if cv.get("pool"):
+            x = _maxpool(x, cv["pool"])
+    x = x.reshape(x.shape[0], -1)
+    for li, p in enumerate(ep["linear"]):
+        x = x @ p["w"] + p["b"]
+        if li < len(ep["linear"]) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def forward_all_exits(params, cfg: CNNConfig, x) -> List[jnp.ndarray]:
+    """Returns logits at every exit + final: [exit0, ..., final]."""
+    outs = []
+    for si in range(len(cfg.stages)):
+        x = run_stage(params, cfg, si, x)
+        if si < len(cfg.stages) - 1:
+            outs.append(run_exit(params, cfg, si, x))
+    outs.append(x)
+    return outs
+
+
+def forward_backbone(params, cfg: CNNConfig, x):
+    """Baseline: straight through, no exits (the paper's red line)."""
+    for si in range(len(cfg.stages)):
+        x = run_stage(params, cfg, si, x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# the three paper networks
+# ---------------------------------------------------------------------------
+
+def b_lenet() -> CNNConfig:
+    """ATHEENA's modified B-LeNet (Fig. 8): 5x5 convs, stride/pool adjusted."""
+    return CNNConfig(
+        name="b-lenet", in_shape=(28, 28, 1), n_classes=10,
+        stages=(
+            CNNStage(convs=({"out": 5, "kernel": 5, "stride": 1, "pool": 2},)),
+            CNNStage(convs=({"out": 10, "kernel": 5, "pool": 2},
+                            {"out": 20, "kernel": 5, "pool": 2}),
+                     flatten=True, linear=()),
+        ),
+        exits=(CNNExit(convs=({"out": 10, "kernel": 3, "pool": 2},), linear=()),),
+    )
+
+
+def b_alexnet() -> CNNConfig:
+    """BranchyNet's CIFAR-10 AlexNet with the first early exit."""
+    return CNNConfig(
+        name="b-alexnet", in_shape=(32, 32, 3), n_classes=10,
+        stages=(
+            CNNStage(convs=({"out": 32, "kernel": 5, "pool": 2},
+                            {"out": 64, "kernel": 5, "pool": 2})),
+            CNNStage(convs=({"out": 96, "kernel": 3},
+                            {"out": 96, "kernel": 3},
+                            {"out": 64, "kernel": 3, "pool": 2}),
+                     flatten=True, linear=(256, 128)),
+        ),
+        exits=(CNNExit(convs=({"out": 32, "kernel": 3, "pool": 2},), linear=(128,)),),
+    )
+
+
+def triple_wins_lenet() -> CNNConfig:
+    """Triple-Wins (Hu et al. ICLR'20) LeNet-style net, first exit."""
+    return CNNConfig(
+        name="triple-wins-lenet", in_shape=(28, 28, 1), n_classes=10,
+        stages=(
+            CNNStage(convs=({"out": 16, "kernel": 5, "pool": 2},)),
+            CNNStage(convs=({"out": 32, "kernel": 5, "pool": 2},),
+                     flatten=True, linear=(120, 84)),
+        ),
+        exits=(CNNExit(convs=(), linear=(64,)),),
+    )
+
+
+CNN_REGISTRY = {
+    "b-lenet": b_lenet,
+    "b-alexnet": b_alexnet,
+    "triple-wins-lenet": triple_wins_lenet,
+}

@@ -1,0 +1,121 @@
+"""Ambient distribution hints for model code.
+
+The model definitions are mesh-agnostic; the cell builders (launch/steps.py)
+publish the production mesh here so perf-critical layers can opt into
+explicit sharding (shard_map sequence-parallel attention, Megatron-SP
+activation constraints) when the mesh supports it. With no mesh set (unit
+tests, single-host examples) every hint is a no-op.
+
+Set at trace time: ``with hints.use_mesh(mesh): jit(f).lower(...)``.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+_MESH = None
+_SP_ATTENTION = True         # master switch for the beyond-paper SP path
+
+
+def mesh():
+    return _MESH
+
+
+@contextlib.contextmanager
+def use_mesh(m, sp_attention: bool = True):
+    global _MESH, _SP_ATTENTION
+    old, olds = _MESH, _SP_ATTENTION
+    _MESH, _SP_ATTENTION = m, sp_attention
+    try:
+        yield
+    finally:
+        _MESH, _SP_ATTENTION = old, olds
+
+
+def set_mesh(m) -> None:
+    global _MESH
+    _MESH = m
+
+
+def batch_axes() -> Tuple[str, ...]:
+    if _MESH is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in _MESH.axis_names)
+
+
+def constrain_seq(x):
+    """Residual-stream layout constraint between blocks, matching the
+    attention decomposition: batch-split (training shapes — everything
+    local, weights stream FSDP-style) or Megatron-SP seq-split (long
+    prefill — elementwise/norm traffic is 1/TP per device; XLA all-gathers
+    only where the full sequence is truly needed). No-op without a mesh."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    if x.ndim != 3 or _MESH is None:
+        return x
+    split = attn_split(x.shape[1], x.shape[0])
+    if split is None:
+        return x
+    kind, baxes = split
+    if kind == "batch":
+        spec = P((*baxes, "model"), None, None)
+    else:
+        spec = P(baxes if baxes else None, "model", None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+def sp_axis(seq_len: int, batch: int) -> Optional[Tuple[str, Tuple[str, ...]]]:
+    """If sequence-parallel attention applies: returns ("model", batch_axes).
+    Conditions: a 'model' axis exists, S divides it, and the global batch
+    divides the batch axes (so shard_map in_specs are exact)."""
+    if _MESH is None or not _SP_ATTENTION:
+        return None
+    names = _MESH.axis_names
+    if "model" not in names:
+        return None
+    m = _MESH.shape["model"]
+    if m <= 1 or seq_len % m != 0 or seq_len // m < 128:
+        return None
+    return "model", _fit_batch_axes(batch)
+
+
+def _fit_batch_axes(batch: int) -> Tuple[str, ...]:
+    """Largest batch-axis subset whose size divides the batch — e.g. the
+    stage-2 slab (capacity 16) on the 2x16x16 multi-pod mesh shards over
+    ('data',) and replicates over 'pod' instead of replicating everywhere
+    (which would redundantly compute the slab 32x)."""
+    axes = batch_axes()
+    cands = [axes] + [(a,) for a in sorted(
+        axes, key=lambda a: -_MESH.shape[a])] + [()]
+    for c in cands:
+        nb = 1
+        for a in c:
+            nb *= _MESH.shape[a]
+        if nb and batch % nb == 0:
+            return c
+    return ()
+
+
+def attn_split(seq_len: int, batch: int):
+    """How to decompose attention over the mesh:
+      ("batch", baxes)  — batch large enough to split over (baxes + model):
+                          each device holds whole sequences, zero K/V comm
+                          and per-sample VMEM-sized tiles (training shapes);
+      ("seq", baxes)    — sequence-parallel with q-offset (long prefill);
+      None              — single-device / tiny mesh: plain path.
+    """
+    if _MESH is None or not _SP_ATTENTION or "model" not in _MESH.axis_names:
+        return None
+    m = _MESH.shape["model"]
+    if m <= 1:
+        return None
+    baxes = _fit_batch_axes(batch)
+    nb = 1
+    for a in baxes:
+        nb *= _MESH.shape[a]
+    if batch % max(nb * m, 1) == 0 and batch >= nb * m:
+        return ("batch", baxes)
+    sp = sp_axis(seq_len, batch)
+    if sp is not None:
+        return ("seq", sp[1])
+    return None

@@ -1,0 +1,208 @@
+"""Mamba-2 SSD (state-space duality) mixer, chunked matmul formulation.
+
+Implements the SSD algorithm of Dao & Gu (arXiv:2405.21060): the sequence is
+split into chunks; intra-chunk interactions are computed as (masked) matmuls
+(MXU-friendly) and inter-chunk state is carried by an associative scan over
+chunk summaries. Decode keeps O(1) state: (conv_state, ssd_state).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads
+
+
+def init_mamba2(key, cfg: ArchConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, H = _dims(cfg)
+    dt = cfg.p_dtype()
+    G, N = s.n_groups, s.d_state
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * d_inner + 2 * G * N + H      # [z, x, B, C, dt]
+    p = {
+        "w_in": dense_init(ks[0], (d, d_in_proj), dt),
+        "conv_w": dense_init(ks[1], (s.conv_kernel, d_inner + 2 * G * N), dt,
+                             scale=0.5),
+        "conv_b": jnp.zeros((d_inner + 2 * G * N,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01))).astype(jnp.float32),
+        "norm": init_rmsnorm(d_inner, dt),
+        "w_out": dense_init(ks[2], (d_inner, d), dt),
+    }
+    return p
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt):
+    s = cfg.ssm
+    d_inner, H = _dims(cfg)
+    G, N = s.n_groups, s.d_state
+    z, x, B_, C, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + G * N,
+                 2 * d_inner + 2 * G * N], axis=-1)
+    return z, x, B_, C, dt
+
+
+def _causal_conv(x, w, b):
+    """x: (B, S, D); w: (K, D) depthwise causal conv."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(x, dt, A_log, B_, C, D, chunk: int):
+    """Core SSD. x: (B,S,H,P); dt: (B,S,H); B_,C: (B,S,G,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bb, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    nc = S // chunk
+    rep = H // G
+    A = -jnp.exp(A_log)                                   # (H,) negative decay
+
+    xc = x.reshape(Bb, nc, chunk, H, P).astype(jnp.float32)
+    dtc = dt.reshape(Bb, nc, chunk, H).astype(jnp.float32)
+    Bc = B_.reshape(Bb, nc, chunk, G, N).astype(jnp.float32)
+    Cc = C.reshape(Bb, nc, chunk, G, N).astype(jnp.float32)
+
+    dA = dtc * A                                          # (B,nc,l,H)
+    cum = jnp.cumsum(dA, axis=2)                          # within-chunk cumsum
+    seg_total = cum[:, :, -1]                             # (B,nc,H)
+
+    # intra-chunk (the "attention-like" quadratic-in-chunk term)
+    # L[i,j] = exp(cum_i - cum_j) * dt_j  for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,l,l,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    CB = jnp.einsum("bclgn,bcsgn->bclsg", Cc, Bc)         # (B,nc,l,l,G)
+    CB = jnp.repeat(CB, rep, axis=-1)                     # broadcast groups->heads
+    scores = CB * L * dtc[:, :, None, :, :]               # (B,nc,l,l,H)
+    y_intra = jnp.einsum("bclsh,bcshp->bclhp", scores, xc)
+
+    # chunk summary states: sum_j exp(total - cum_j) dt_j B_j x_j
+    decay_to_end = jnp.exp(seg_total[:, :, None] - cum)   # (B,nc,l,H)
+    wB = jnp.repeat(Bc, rep, axis=-2)                     # (B,nc,l,H,N)
+    states = jnp.einsum("bclh,bclhn,bclhp->bchpn", decay_to_end * dtc, wB, xc)
+
+    # inter-chunk recurrence over chunk states (associative scan)
+    seg_decay = jnp.exp(seg_total)                        # (B,nc,H)
+
+    def combine(a, b):
+        da, sa = a
+        db, sb = b
+        return (da * db, sa * db[..., None, None] + sb)
+
+    d_all, s_all = jax.lax.associative_scan(
+        combine, (seg_decay, states), axis=1)
+    # state entering chunk c = scanned state of chunk c-1 (shift right)
+    init_states = jnp.pad(s_all[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    final_state = s_all[:, -1]                            # (B,H,P,N)
+
+    # contribution of carried-in state to each position
+    decay_from_start = jnp.exp(cum)                       # (B,nc,l,H)
+    wC = jnp.repeat(Cc, rep, axis=-2)
+    y_inter = jnp.einsum("bclhn,bchpn,bclh->bclhp", wC, init_states,
+                         decay_from_start)
+
+    y = y_intra + y_inter + (D[None, None, None, :, None] * xc)
+    return y.reshape(Bb, S, H, P), final_state
+
+
+def mamba2_fwd(params, cfg: ArchConfig, h) -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence mixer. h: (B, S, d_model). Returns (out, final_state)."""
+    s = cfg.ssm
+    d_inner, H = _dims(cfg)
+    G, N = s.n_groups, s.d_state
+    B, S, _ = h.shape
+    zxbcdt = jnp.einsum("bsd,de->bse", h, params["w_in"])
+    z, x, B_, C, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([x, B_, C], axis=-1)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    x, B_, C = jnp.split(xbc, [d_inner, d_inner + G * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    x = x.reshape(B, S, H, s.head_dim)
+    B_ = B_.reshape(B, S, G, N)
+    C = C.reshape(B, S, G, N)
+    pad = (-S) % s.chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, state = ssd_chunked(x, dt, params["A_log"], B_, C, params["D"], s.chunk)
+    y = y[:, :S].reshape(B, S, d_inner).astype(h.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype),
+                cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    return out, {"ssd": state.astype(jnp.float32),
+                 "conv": _last_conv_state(cfg, h, zxbcdt)}
+
+
+def _last_conv_state(cfg: ArchConfig, h, zxbcdt):
+    """Keep the last K-1 pre-conv activations for decode."""
+    s = cfg.ssm
+    d_inner, _ = _dims(cfg)
+    G, N = s.n_groups, s.d_state
+    _, x, B_, C, _ = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([x, B_, C], axis=-1)
+    K = s.conv_kernel
+    B = h.shape[0]
+    tail = xbc[:, -(K - 1):]
+    pad = (K - 1) - tail.shape[1]
+    if pad > 0:
+        tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+    return tail
+
+
+def init_mamba2_state(cfg: ArchConfig, batch: int) -> dict:
+    s = cfg.ssm
+    d_inner, H = _dims(cfg)
+    G, N = s.n_groups, s.d_state
+    return {
+        "ssd": jnp.zeros((batch, H, s.head_dim, N), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, d_inner + 2 * G * N),
+                          cfg.act_dtype()),
+    }
+
+
+def mamba2_decode(params, cfg: ArchConfig, h, state) -> Tuple[jnp.ndarray, dict]:
+    """One-token step. h: (B, 1, d). state: {"ssd","conv"}."""
+    s = cfg.ssm
+    d_inner, H = _dims(cfg)
+    G, N = s.n_groups, s.d_state
+    B = h.shape[0]
+    zxbcdt = jnp.einsum("bsd,de->bse", h, params["w_in"])[:, 0]
+    z, x, B_, C, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([x, B_, C], axis=-1)              # (B, D')
+    conv_in = jnp.concatenate([state["conv"], xbc[:, None]], axis=1)  # (B,K,D')
+    w = params["conv_w"]
+    out = jnp.einsum("bkd,kd->bd", conv_in.astype(jnp.float32),
+                     w.astype(jnp.float32)) + params["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(out).astype(h.dtype)
+    x, B_, C = jnp.split(xbc, [d_inner, d_inner + G * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,H)
+    x = x.reshape(B, H, s.head_dim).astype(jnp.float32)
+    B_ = jnp.repeat(B_.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    C = jnp.repeat(C.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"])                                      # (H,)
+    dA = jnp.exp(dt * A)                                               # (B,H)
+    new_state = state["ssd"] * dA[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, B_, x)
+    y = jnp.einsum("bhn,bhpn->bhp", C, new_state) + params["D"][None, :, None] * x
+    y = y.reshape(B, d_inner).astype(h.dtype)
+    y = rmsnorm(params["norm"],
+                y * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype), cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, params["w_out"])
+    return out[:, None], {"ssd": new_state, "conv": conv_in[:, 1:]}

@@ -1,0 +1,119 @@
+"""Mixture-of-Experts with fixed-capacity sort-based dispatch.
+
+Dispatch is gather/scatter based (no one-hot (T,E,C) tensor): tokens are
+replicated top_k times, sorted by expert id, and each expert processes a
+fixed-capacity contiguous slab. This is static-shaped (XLA/TPU friendly),
+shards cleanly (experts over the "model" axis, capacity over "data"), and
+drops overflow tokens exactly like capacity-factor MoE implementations.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import dense_init, init_mlp, mlp
+
+
+def expert_capacity(n_tokens: int, cfg: ArchConfig, multiple: int = 128) -> int:
+    m = cfg.moe
+    c = int(m.capacity_factor * n_tokens * m.top_k / m.n_experts)
+    return max(multiple, ((c + multiple - 1) // multiple) * multiple)
+
+
+def init_moe(key, cfg: ArchConfig) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    dt = cfg.p_dtype()
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, m.n_experts), jnp.float32),
+        # stacked expert weights (E, ...), SwiGLU experts
+        "e_gate": dense_init(ks[1], (m.n_experts, d, m.d_ff_expert), dt),
+        "e_up": dense_init(ks[2], (m.n_experts, d, m.d_ff_expert), dt),
+        "e_down": dense_init(ks[3], (m.n_experts, m.d_ff_expert, d), dt),
+    }
+    if m.n_shared:
+        p["shared"] = init_mlp(jax.random.fold_in(key, 7), d,
+                               m.d_ff_expert * m.n_shared, "swiglu", dt)
+    return p
+
+
+def route(params, cfg: ArchConfig, x_flat) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x_flat: (T, d) -> (topk_idx (T,k), topk_w (T,k), aux_loss ())."""
+    m = cfg.moe
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_w, topk_idx = jax.lax.top_k(probs, m.top_k)
+    topk_w = topk_w / jnp.maximum(jnp.sum(topk_w, axis=-1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    T = x_flat.shape[0]
+    f = jnp.zeros((m.n_experts,), jnp.float32).at[topk_idx.reshape(-1)].add(
+        1.0 / (T * m.top_k))
+    P = jnp.mean(probs, axis=0)
+    aux = m.n_experts * jnp.sum(f * P)
+    return topk_idx, topk_w, aux
+
+
+def moe_fwd(params, cfg: ArchConfig, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss ())."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    C = expert_capacity(T, cfg)
+    xf = x.reshape(T, d)
+    topk_idx, topk_w, aux = route(params, cfg, xf)
+
+    # ---- dispatch: sort (token,slot) assignments by expert -----------------
+    flat_e = topk_idx.reshape(-1)                       # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(T), m.top_k)         # token id per assignment
+    flat_w = topk_w.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)            # group by expert
+    e_sorted = flat_e[order]
+    t_sorted = flat_t[order]
+    w_sorted = flat_w[order]
+    # position within the expert group
+    pos_in_e = jnp.arange(T * m.top_k) - jnp.searchsorted(
+        e_sorted, e_sorted, side="left")
+    keep = pos_in_e < C                                  # capacity drop
+    slot = e_sorted * C + jnp.minimum(pos_in_e, C - 1)   # (T*k,) flat slab slot
+
+    # gather tokens into the (E*C, d) slab; dropped tokens contribute nothing
+    slab = jnp.zeros((m.n_experts * C, d), x.dtype)
+    slab = slab.at[slot].add(jnp.where(keep[:, None], xf[t_sorted], 0))
+    slab = slab.reshape(m.n_experts, C, d)
+
+    # ---- expert computation (E, C, d) x (E, d, f) --------------------------
+    g = jnp.einsum("ecd,edf->ecf", slab, params["e_gate"])
+    u = jnp.einsum("ecd,edf->ecf", slab, params["e_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    y = jnp.einsum("ecf,efd->ecd", h, params["e_down"]).reshape(m.n_experts * C, d)
+
+    # ---- combine: weighted scatter-add back to tokens ----------------------
+    contrib = y[slot] * jnp.where(keep, w_sorted, 0.0)[:, None].astype(x.dtype)
+    out = jnp.zeros((T, d), x.dtype).at[t_sorted].add(contrib)
+
+    if m.n_shared:
+        out = out + mlp(params["shared"], xf, "swiglu")
+    return out.reshape(B, S, d), aux
+
+
+def moe_fwd_dense(params, cfg: ArchConfig, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Reference dense formulation: every expert sees every token (oracle for
+    tests; O(E/topk) more FLOPs, never used in the hot path)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    xf = x.reshape(-1, d)
+    topk_idx, topk_w, aux = route(params, cfg, xf)
+    g = jnp.einsum("td,edf->tef", xf, params["e_gate"])
+    u = jnp.einsum("td,edf->tef", xf, params["e_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    y = jnp.einsum("tef,efd->ted", h, params["e_down"])       # (T, E, d)
+    w_full = jnp.zeros((xf.shape[0], m.n_experts), jnp.float32).at[
+        jnp.arange(xf.shape[0])[:, None], topk_idx].set(topk_w)
+    out = jnp.einsum("te,ted->td", w_full.astype(x.dtype), y)
+    if m.n_shared:
+        out = out + mlp(params["shared"], xf, "swiglu")
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,30 @@
+"""Architecture registry: --arch <id> resolution for all entry points."""
+from __future__ import annotations
+
+from repro.configs.archs import ARCHS, SHAPES, shape_applicable, smoke_config
+from repro.models.cnn import CNN_REGISTRY
+from repro.models.config import ArchConfig
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_smoke(name: str) -> ArchConfig:
+    return smoke_config(get_arch(name))
+
+
+def list_archs():
+    return sorted(ARCHS)
+
+
+def list_cells():
+    """All (arch, shape) cells with applicability."""
+    cells = []
+    for a in sorted(ARCHS):
+        for s in SHAPES:
+            ok, why = shape_applicable(ARCHS[a], s)
+            cells.append((a, s, ok, why))
+    return cells

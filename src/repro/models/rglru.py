@@ -1,0 +1,112 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence: h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with a_t = exp(-c * softplus(Lambda) * sigmoid(r_t)). Full-sequence form uses
+an associative scan; decode keeps O(1) state (rnn state + conv tail).
+The block follows Griffin's recurrent block: in-proj to (x, gate) branches,
+causal conv on x, RG-LRU, gated by GeLU(gate), out-proj.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import dense_init
+
+
+def _width(cfg: ArchConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def init_rglru(key, cfg: ArchConfig) -> dict:
+    r = cfg.rglru
+    d = cfg.d_model
+    w = _width(cfg)
+    dt = cfg.p_dtype()
+    ks = jax.random.split(key, 6)
+    # Lambda init so a^c in (0.9, 0.999) roughly — standard LRU init
+    u = jax.random.uniform(ks[4], (w,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2.0 * r.c)))   # softplus^-1
+    return {
+        "w_x": dense_init(ks[0], (d, w), dt),
+        "w_gate": dense_init(ks[1], (d, w), dt),
+        "conv_w": dense_init(ks[2], (r.conv_kernel, w), dt, scale=0.5),
+        "conv_b": jnp.zeros((w,), dt),
+        "w_rec_gate": dense_init(ks[3], (w, w), dt),       # r_t gate
+        "w_in_gate": dense_init(ks[5], (w, w), dt),        # i_t gate
+        "Lambda": lam,
+        "w_out": dense_init(jax.random.fold_in(key, 9), (w, d), dt),
+    }
+
+
+def _gates(params, cfg: ArchConfig, x):
+    """x: (..., w) conv output -> (a (fp32), gated input (fp32))."""
+    r = cfg.rglru
+    xf = x.astype(jnp.float32)
+    rec = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", xf,
+                                    params["w_rec_gate"].astype(jnp.float32)))
+    inp = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", xf,
+                                    params["w_in_gate"].astype(jnp.float32)))
+    log_a = -r.c * jax.nn.softplus(params["Lambda"]) * rec
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (inp * xf)
+    return a, gated
+
+
+def _causal_conv(x, w, b):
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return out + b
+
+
+def rglru_fwd(params, cfg: ArchConfig, h) -> Tuple[jnp.ndarray, dict]:
+    """h: (B, S, d) -> (out, state) with an associative scan over S."""
+    B, S, _ = h.shape
+    x = jnp.einsum("bsd,dw->bsw", h, params["w_x"])
+    gate = jnp.einsum("bsd,dw->bsw", h, params["w_gate"])
+    conv_in = x
+    x = _causal_conv(x, params["conv_w"], params["conv_b"])
+    a, gx = _gates(params, cfg, x)                        # (B,S,w) fp32
+
+    def combine(c1, c2):
+        a1, h1 = c1
+        a2, h2 = c2
+        return (a1 * a2, h1 * a2 + h2)
+
+    _, states = jax.lax.associative_scan(combine, (a, gx), axis=1)
+    y = states.astype(h.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(h.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, params["w_out"])
+    K = cfg.rglru.conv_kernel
+    tail = conv_in[:, -(K - 1):]
+    if tail.shape[1] < K - 1:
+        tail = jnp.pad(tail, ((0, 0), (K - 1 - tail.shape[1], 0), (0, 0)))
+    return out, {"rnn": states[:, -1], "conv": tail}
+
+
+def init_rglru_state(cfg: ArchConfig, batch: int) -> dict:
+    w = _width(cfg)
+    K = cfg.rglru.conv_kernel
+    return {
+        "rnn": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, w), cfg.act_dtype()),
+    }
+
+
+def rglru_decode(params, cfg: ArchConfig, h, state) -> Tuple[jnp.ndarray, dict]:
+    """One-token step. h: (B, 1, d)."""
+    B = h.shape[0]
+    x = jnp.einsum("bd,dw->bw", h[:, 0], params["w_x"])
+    gate = jnp.einsum("bd,dw->bw", h[:, 0], params["w_gate"])
+    conv_in = jnp.concatenate([state["conv"], x[:, None]], axis=1)   # (B,K,w)
+    xc = jnp.einsum("bkw,kw->bw", conv_in.astype(jnp.float32),
+                    params["conv_w"].astype(jnp.float32)) + \
+        params["conv_b"].astype(jnp.float32)
+    a, gx = _gates(params, cfg, xc)
+    new = state["rnn"] * a + gx
+    y = new.astype(h.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(h.dtype)
+    out = jnp.einsum("bw,wd->bd", y, params["w_out"])
+    return out[:, None], {"rnn": new, "conv": conv_in[:, 1:]}

@@ -1,0 +1,152 @@
+"""AdamW with ZeRO-1 moment sharding, schedules, clipping and int8 gradient
+compression with error feedback.
+
+Pure-functional (init/update) like optax, but self-contained and
+sharding-aware: ``zero1_sharding`` produces moment shardings that spread the
+fp32 (m, v) pairs over the ``data`` mesh axis, the standard ZeRO-1 layout —
+params/grads stay in their TP layout, optimizer state adds no replicated
+fp32 copies.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    compress_grads: bool = False      # int8 + error feedback
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray                 # () int32
+    m: Any                            # fp32 pytree
+    v: Any                            # fp32 pytree
+    err: Any                          # error-feedback residual (or None)
+
+
+def schedule(cfg: AdamWConfig, step) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def init(cfg: AdamWConfig, params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        err=jax.tree.map(zeros, params) if cfg.compress_grads else None,
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+# -- int8 gradient compression with error feedback ---------------------------
+
+def compress_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    a = jnp.max(jnp.abs(g)).astype(jnp.float32)
+    scale = jnp.where(a > 0, a / 127.0, 1.0)
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def _compress_with_feedback(g, e):
+    """g' = Q(g + e); e' = (g + e) - g'. The residual is re-injected next
+    step so the quantization error doesn't bias the trajectory."""
+    t = g.astype(jnp.float32) + e
+    q, s = compress_int8(t)
+    d = decompress_int8(q, s)
+    return d, t - d
+
+
+def update(cfg: AdamWConfig, state: AdamWState, params, grads
+           ) -> Tuple[Any, AdamWState, dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-12))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    new_err = state.err
+    if cfg.compress_grads:
+        pairs = jax.tree.map(_compress_with_feedback, grads, state.err)
+        grads = jax.tree.map(lambda p: p[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda p: p[1], pairs,
+                               is_leaf=lambda x: isinstance(x, tuple))
+
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    c1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    c2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    m = jax.tree.map(lambda mm, g: cfg.b1 * mm + (1 - cfg.b1) * g,
+                     state.m, grads)
+    v = jax.tree.map(lambda vv, g: cfg.b2 * vv + (1 - cfg.b2) * g * g,
+                     state.v, grads)
+
+    def step_fn(p, mm, vv):
+        upd = (mm / c1) / (jnp.sqrt(vv / c2) + cfg.eps)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+    new_params = jax.tree.map(step_fn, params, m, v)
+    return new_params, AdamWState(step=step, m=m, v=v, err=new_err), {
+        "grad_norm": gn, "lr": lr}
+
+
+# -- sharding -----------------------------------------------------------------
+
+def zero1_sharding(mesh, param_specs) -> AdamWState:
+    """NamedSharding pytree for AdamWState: moments take the param's spec
+    with the FIRST unsharded dimension additionally sharded over 'data'
+    (ZeRO-1). Falls back to the param spec when no dim is divisible."""
+    data_ax = "data"
+
+    def moment_spec(spec: P) -> P:
+        parts = list(spec) if spec else []
+        for i, ax in enumerate(parts):
+            if ax is None:
+                parts[i] = data_ax
+                return P(*parts)
+        return P(*parts) if parts else P()
+
+    def shard(spec):
+        return NamedSharding(mesh, moment_spec(spec))
+
+    m_sh = jax.tree.map(shard, param_specs)
+    return AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=m_sh, v=m_sh,
+        err=None,
+    )

@@ -1,0 +1,1 @@
+from repro.runtime import elastic, serve_loop, train_loop

@@ -1,0 +1,63 @@
+"""Elastic re-meshing: re-plan a deployment for a degraded device set.
+
+When a node fails mid-serve, the stage-mesh apportionment is re-derived for
+the surviving chip count from the SAME TAP curves (no re-profiling) and the
+checkpoint restores onto the new mesh — param shardings are re-laid-out by
+jax.device_put under the new NamedSharding. The dry-run proves the degraded
+plan compiles (tests/test_elastic).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+
+from repro.core import tap as T
+from repro.core.stage_mesh import StageMeshPlan, make_stage_meshes
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    chips_before: int
+    chips_after: int
+    design: T.CombinedDesign
+    throughput_before: float
+    throughput_after: float
+
+    @property
+    def degradation(self) -> float:
+        return self.throughput_after / max(self.throughput_before, 1e-12)
+
+
+def replan(tap1: T.TAPFunction, tap2: T.TAPFunction, p: float,
+           chips_before: int, chips_after: int,
+           hbm_per_chip_gb: float = 16.0) -> ElasticPlan:
+    """Re-run the Eq. (1) combination at the degraded chip budget."""
+    before = T.combine(tap1, tap2, p,
+                       budget=(chips_before, chips_before * hbm_per_chip_gb))
+    after = T.combine(tap1, tap2, p,
+                      budget=(chips_after, chips_after * hbm_per_chip_gb))
+    if after is None:
+        raise RuntimeError(
+            f"no feasible design at {chips_after} chips — shed load or "
+            f"shrink capacity")
+    return ElasticPlan(
+        chips_before=chips_before, chips_after=chips_after, design=after,
+        throughput_before=before.design_throughput if before else 0.0,
+        throughput_after=after.design_throughput)
+
+
+def degrade_mesh(devices: Sequence, failed: Sequence[int],
+                 plan: StageMeshPlan) -> Tuple[jax.sharding.Mesh, ...]:
+    """Drop failed device indices and rebuild stage submeshes from the
+    survivors (caller re-plans chips1/chips2 first via ``replan``)."""
+    alive = [d for i, d in enumerate(devices) if i not in set(failed)]
+    return make_stage_meshes(np.array(alive, dtype=object), plan)
+
+
+def relayout(tree, shardings):
+    """Move a checkpoph pytree onto a (new) sharding pytree."""
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)

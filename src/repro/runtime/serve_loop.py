@@ -1,0 +1,148 @@
+"""Two-stage Early-Exit serving runtime (the paper's Fig. 3 pipeline).
+
+Stage 1 (full batch) -> Exit Decision -> Conditional Buffer (compaction into
+fixed-capacity hard-sample buckets) -> Stage 2 (buckets only) -> Exit Merge
+by Sample ID. Between the stages sits a bounded hard-sample queue — the
+conditional buffer's occupancy is the paper's Fig. 7 deadlock/sizing story
+and yields the Fig. 4 q-vs-p robustness behaviour:
+
+  q < p : stage 2 under-fed, bucket bubbles, stage 1 limits throughput;
+  q > p : queue grows; when full, stage 1 stalls (backpressure) and
+          throughput degrades by ~p/q — exactly the shaded band.
+
+The runtime tracks realized q and reports occupancy/stall statistics so a
+deployment can re-plan (``core.stage_mesh``) when drift is persistent.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import conditional as cond
+from repro.core import early_exit as ee
+from repro.core import exit_decision as ed
+from repro.models.config import ArchConfig
+
+
+@dataclass
+class ServeConfig:
+    capacity: int                   # stage-2 bucket size (ceil(p*B) rounded)
+    queue_depth: int = 4            # buckets the buffer can hold
+    c_thr: float = 0.9
+
+
+@dataclass
+class ServeStats:
+    n_samples: int = 0
+    n_exited: int = 0
+    n_stage2: int = 0
+    n_stalls: int = 0
+    bucket_fill: List[float] = field(default_factory=list)
+
+    @property
+    def realized_q(self) -> float:
+        return self.n_stage2 / max(self.n_samples, 1)
+
+    def as_dict(self):
+        return {"n_samples": self.n_samples, "n_exited": self.n_exited,
+                "n_stage2": self.n_stage2, "n_stalls": self.n_stalls,
+                "realized_q": self.realized_q,
+                "mean_bucket_fill": float(np.mean(self.bucket_fill))
+                if self.bucket_fill else 0.0}
+
+
+class TwoStageServer:
+    """Batch-level EE server over jitted stage callables.
+
+    stage1_fn: tokens (B, S) -> (hidden, exit_logits)
+    stage2_fn: hidden slab (C, S, d) -> final logits (C, V)
+    In a stage-mesh deployment each callable is jitted onto its own submesh
+    (launch/serve.py); here they may share one device.
+    """
+
+    def __init__(self, stage1_fn: Callable, stage2_fn: Callable,
+                 sc: ServeConfig):
+        self.stage1 = stage1_fn
+        self.stage2 = stage2_fn
+        self.sc = sc
+        self.queue: deque = deque()          # (hidden_row, sample_id) pairs
+        self.stats = ServeStats()
+
+    def _drain_bucket(self, results: dict):
+        """Pop up to ``capacity`` queued hard samples, run stage 2, merge."""
+        take = min(len(self.queue), self.sc.capacity)
+        if take == 0:
+            return
+        rows, ids = zip(*[self.queue.popleft() for _ in range(take)])
+        slab = jnp.stack(list(rows))
+        if take < self.sc.capacity:          # flush slots (paper §III-C.2)
+            pad = jnp.broadcast_to(slab[:1],
+                                   (self.sc.capacity - take,) + slab.shape[1:])
+            slab = jnp.concatenate([slab, pad])
+        logits = self.stage2(slab)
+        for i, sid in enumerate(ids):
+            results[sid] = np.asarray(logits[i])
+        self.stats.n_stage2 += take
+        self.stats.bucket_fill.append(take / self.sc.capacity)
+
+    def submit(self, tokens: np.ndarray, sample_ids: np.ndarray,
+               results: dict):
+        """Serve one stage-1 batch; easy samples resolve immediately, hard
+        ones enqueue. Buckets drain whenever a full bucket is available; if
+        the queue would overflow, drain first (stage-1 backpressure stall)."""
+        hidden, exit_logits = self.stage1(jnp.asarray(tokens))
+        exit_mask, pred, conf = ed.decision_and_argmax(
+            exit_logits, self.sc.c_thr)
+        exit_mask = np.asarray(exit_mask)
+        self.stats.n_samples += len(sample_ids)
+        for i, sid in enumerate(sample_ids):
+            if exit_mask[i]:
+                results[sid] = np.asarray(exit_logits[i])
+                self.stats.n_exited += 1
+            else:
+                if len(self.queue) >= self.sc.queue_depth * self.sc.capacity:
+                    self.stats.n_stalls += 1
+                    self._drain_bucket(results)
+                self.queue.append((jnp.asarray(hidden[i]), int(sid)))
+        while len(self.queue) >= self.sc.capacity:
+            self._drain_bucket(results)
+
+    def flush(self, results: dict):
+        while self.queue:
+            self._drain_bucket(results)
+
+
+def build_server(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
+                 sc: ServeConfig) -> TwoStageServer:
+    """Single-host server over the EE model (examples + tests)."""
+
+    @jax.jit
+    def s1(tokens):
+        h, _, logits, _ = ee.stage1_prefill(params, cfg, spec, tokens)
+        return h, logits
+
+    @jax.jit
+    def s2(slab):
+        logits, _ = ee.stage2_prefill(params, cfg, spec, slab)
+        return logits
+
+    return TwoStageServer(s1, s2, sc)
+
+
+def serve_dataset(server: TwoStageServer, tokens: np.ndarray,
+                  batch: int) -> dict:
+    """Run a whole token set through the server in stage-1 batches.
+    Returns {sample_id: logits} plus the stats object."""
+    n = tokens.shape[0]
+    results: dict = {}
+    for lo in range(0, n, batch):
+        hi = min(lo + batch, n)
+        server.submit(tokens[lo:hi], np.arange(lo, hi), results)
+    server.flush(results)
+    return results

@@ -1,0 +1,137 @@
+"""Fault-tolerant training loop.
+
+train_step = joint BranchyNet EE loss (all samples traverse all layers at
+training time — the stage split is a *serving* feature, matching the paper
+where training happens offline) + AdamW. The loop provides:
+
+  - periodic async checkpoints (atomic commit protocol, checkpoint/ckpt.py);
+  - restore-on-start: resumes from the newest committed step, replaying the
+    deterministic data stream from there (bit-exact — tested);
+  - failure injection: ``fail_at_step`` raises mid-run to exercise restart;
+  - straggler mitigation: data fetches run under a timeout with re-issue.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt as CK
+from repro.core import early_exit as ee
+from repro.core import losses
+from repro.data import pipeline as dp
+from repro.models.config import ArchConfig
+from repro.optim import adamw
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    log_every: int = 10
+    fail_at_step: Optional[int] = None          # failure injection
+    fetch_timeout_s: float = 30.0
+    straggler: dp.StragglerModel = field(
+        default_factory=lambda: dp.StragglerModel(0.0))
+    optim: adamw.AdamWConfig = field(default_factory=adamw.AdamWConfig)
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+def make_train_step(cfg: ArchConfig, spec: ee.EarlyExitSpec,
+                    opt: adamw.AdamWConfig, *, donate: bool = True):
+    """Jitted (params, opt_state, tokens, labels) -> (params, opt_state,
+    metrics). The EE joint loss backpropagates through both heads."""
+
+    def loss_fn(params, tokens, labels):
+        eh, fh, aux = ee.forward_train(params, cfg, spec, tokens)
+        loss, parts = losses.branchynet_joint_loss(
+            params, cfg, eh, fh, labels, spec.loss_weights, aux=aux)
+        return loss, parts
+
+    def step(params, opt_state, tokens, labels):
+        (loss, parts), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, tokens, labels)
+        params, opt_state, om = adamw.update(opt, opt_state, params, grads)
+        metrics = {"loss": loss, **parts, **om}
+        return params, opt_state, metrics
+
+    kw = {"donate_argnums": (0, 1)} if donate else {}
+    return jax.jit(step, **kw)
+
+
+def train(cfg: ArchConfig, spec: ee.EarlyExitSpec, tc: TrainConfig, *,
+          stream_spec: dp.LMStreamSpec, seed: int = 0,
+          on_step: Optional[Callable[[int, dict], None]] = None) -> dict:
+    """Run (or resume) training. Returns final {params, opt_state, step,
+    history}. Restores from tc.ckpt_dir when a committed step exists."""
+    key = jax.random.PRNGKey(seed)
+    params = ee.init_ee_params(key, cfg, spec)
+    opt_state = adamw.init(tc.optim, params)
+
+    start = 0
+    latest = CK.latest_step(tc.ckpt_dir)
+    if latest is not None:
+        state = CK.restore(tc.ckpt_dir, latest,
+                           {"params": params, "opt": opt_state})
+        params, opt_state = state["params"], state["opt"]
+        opt_state = adamw.AdamWState(*opt_state.values()) if isinstance(
+            opt_state, dict) else opt_state
+        start = latest
+    step_fn = make_train_step(cfg, spec, tc.optim)
+    ckpt = CK.AsyncCheckpointer(tc.ckpt_dir, keep=tc.keep)
+    history = []
+
+    for t in range(start, tc.steps):
+        def fetch(t=t):
+            tc.straggler.maybe_stall()
+            return dp.lm_batch(stream_spec, t)
+
+        (tokens, labels), timed_out = dp.fetch_with_timeout(
+            fetch, timeout_s=tc.fetch_timeout_s,
+            backup=lambda t=t: dp.lm_batch(stream_spec, t))
+        params, opt_state, metrics = step_fn(
+            params, opt_state, jnp.asarray(tokens), jnp.asarray(labels))
+
+        if tc.fail_at_step is not None and t == tc.fail_at_step:
+            ckpt.wait()
+            raise InjectedFailure(f"injected failure at step {t}")
+
+        if (t + 1) % tc.ckpt_every == 0 or t + 1 == tc.steps:
+            ckpt.save_async(t + 1, {"params": params, "opt": opt_state},
+                            extra={"timed_out": bool(timed_out)})
+        if (t + 1) % tc.log_every == 0 or t + 1 == tc.steps:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": t + 1, **m})
+            if on_step:
+                on_step(t + 1, m)
+    ckpt.wait()
+    return {"params": params, "opt_state": opt_state, "step": tc.steps,
+            "history": history}
+
+
+def train_with_restarts(cfg: ArchConfig, spec: ee.EarlyExitSpec,
+                        tc: TrainConfig, *, stream_spec: dp.LMStreamSpec,
+                        max_restarts: int = 3, seed: int = 0) -> dict:
+    """Supervisor: rerun ``train`` across injected/real failures. After the
+    first failure the injection is disarmed (the node is 'replaced')."""
+    attempts = 0
+    while True:
+        try:
+            out = train(cfg, spec, tc, stream_spec=stream_spec, seed=seed)
+            out["restarts"] = attempts
+            return out
+        except InjectedFailure:
+            attempts += 1
+            if attempts > max_restarts:
+                raise
+            tc.fail_at_step = None           # node replaced; resume from ckpt

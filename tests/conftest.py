@@ -1,0 +1,41 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU device
+(only launch/dryrun.py forces the 512-device platform)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import early_exit as ee
+from repro.models.config import ArchConfig
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg() -> ArchConfig:
+    """4-layer dense LM, small enough for CPU integration tests."""
+    return ArchConfig(
+        name="tiny-dense", family="dense", n_layers=4, d_model=32,
+        n_heads=4, n_kv_heads=2, d_ff=64, vocab=64,
+        dtype="float32", param_dtype="float32", tie_embeddings=True,
+    )
+
+
+@pytest.fixture(scope="session")
+def tiny_spec(tiny_cfg) -> ee.EarlyExitSpec:
+    return ee.EarlyExitSpec(exit_layer=2, c_thr=0.5)
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_cfg, tiny_spec):
+    return ee.init_ee_params(jax.random.PRNGKey(0), tiny_cfg, tiny_spec)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(42)
+
+
+def assert_finite(tree, name=""):
+    for leaf in jax.tree.leaves(tree):
+        arr = jnp.asarray(leaf)
+        if jnp.issubdtype(arr.dtype, jnp.floating):
+            assert bool(jnp.isfinite(arr.astype(jnp.float32)).all()), \
+                f"non-finite values in {name}"

@@ -1,0 +1,111 @@
+"""EarlyExitModel semantics: exit routing, boundary validation, threshold
+extremes, capacity overflow behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import early_exit as ee
+from repro.core import exit_decision as ed
+
+
+def test_boundary_validation(tiny_cfg):
+    ee.validate_boundary(tiny_cfg, 2)
+    with pytest.raises(ValueError):
+        ee.validate_boundary(tiny_cfg, 99)
+    cfg2 = tiny_cfg.replace(pattern=("attn", "attn"))
+    with pytest.raises(ValueError):
+        ee.validate_boundary(cfg2, 3)          # not superblock aligned
+    ee.validate_boundary(cfg2, 2)
+
+
+def test_default_exit_layer_alignment():
+    from repro.models.registry import get_arch, list_archs
+    for a in list_archs():
+        cfg = get_arch(a)
+        k = cfg.default_exit_layers()[0]
+        ee.validate_boundary(cfg, k)
+        assert cfg.first_k_dense < k < cfg.n_layers
+
+
+def test_cthr_extremes_route_everything(tiny_cfg, tiny_params):
+    """c_thr<=0 -> every sample exits (logits from stage 1);
+    c_thr>=1 -> none exit (logits from stage 2)."""
+    B, S = 4, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(0), (B, S), 0,
+                                tiny_cfg.vocab)
+
+    spec_all = ee.EarlyExitSpec(exit_layer=2, c_thr=0.0)
+    out = ee.serve_batch(tiny_params, tiny_cfg, spec_all, tokens)
+    assert bool(out["exit_mask"].all())
+    np.testing.assert_allclose(np.asarray(out["logits"]),
+                               np.asarray(out["exit_logits"]), rtol=1e-6)
+
+    spec_none = ee.EarlyExitSpec(exit_layer=2, c_thr=1.1)
+    out = ee.serve_batch(tiny_params, tiny_cfg, spec_none, tokens,
+                         capacity=B)
+    assert not bool(out["exit_mask"].any())
+    assert int(out["n_hard"]) == B
+    # merged logits must come from stage 2, i.e. differ from exit logits
+    assert not np.allclose(np.asarray(out["logits"]),
+                           np.asarray(out["exit_logits"]))
+
+
+def test_serve_batch_merge_consistency(tiny_cfg, tiny_params, tiny_spec):
+    """Easy rows of the merged output equal the exit logits row-for-row."""
+    B, S = 6, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                tiny_cfg.vocab)
+    out = ee.serve_batch(tiny_params, tiny_cfg, tiny_spec, tokens,
+                         capacity=B)
+    mask = np.asarray(out["exit_mask"])
+    merged = np.asarray(out["logits"])
+    exitl = np.asarray(out["exit_logits"])
+    np.testing.assert_allclose(merged[mask], exitl[mask], rtol=1e-6)
+    # decision recomputed from logits matches the mask
+    re_mask = np.asarray(ed.exit_decision(out["exit_logits"],
+                                          tiny_spec.c_thr))
+    np.testing.assert_array_equal(mask, re_mask)
+
+
+def test_capacity_overflow_reports(tiny_cfg, tiny_params):
+    """With capacity 1 and no sample exiting, overflow = B - 1."""
+    spec = ee.EarlyExitSpec(exit_layer=2, c_thr=1.1)
+    B, S = 5, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                tiny_cfg.vocab)
+    out = ee.serve_batch(tiny_params, tiny_cfg, spec, tokens, capacity=1)
+    assert int(out["overflow"]) == B - 1
+
+
+def test_exit_head_uses_tied_embedding(tiny_cfg, tiny_params, tiny_spec):
+    h = jax.random.normal(jax.random.PRNGKey(3), (2, tiny_cfg.d_model),
+                          jnp.float32)
+    logits = ee.exit_head(tiny_params, tiny_cfg, h)
+    assert logits.shape == (2, tiny_cfg.vocab)
+    assert logits.dtype == jnp.float32
+
+
+def test_two_stage_decode_consistency(tiny_cfg, tiny_params, tiny_spec):
+    """stage1_decode + stage2_decode on the full batch equals the unstaged
+    decode_step."""
+    from repro.models import transformer as T
+    B, S = 3, 6
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (B, S + 1), 0,
+                                tiny_cfg.vocab)
+    _, caches, _ = T.prefill(tiny_params["backbone"], tiny_cfg,
+                             tokens[:, :S], max_len=S + 4)
+    want, _ = T.decode_step(tiny_params["backbone"], tiny_cfg,
+                            tokens[:, S:S + 1],
+                            jax.tree.map(lambda x: x, caches), jnp.int32(S))
+
+    c1, c2 = ee.split_caches(tiny_cfg, tiny_spec, caches)
+    h, nc1, exit_logits = ee.stage1_decode(tiny_params, tiny_cfg, tiny_spec,
+                                           tokens[:, S:S + 1], c1,
+                                           jnp.int32(S))
+    slab_idx = jnp.arange(B, dtype=jnp.int32)     # all samples "hard"
+    final_logits, nc2 = ee.stage2_decode(tiny_params, tiny_cfg, tiny_spec,
+                                         jnp.take(h, slab_idx, axis=0), c2,
+                                         jnp.int32(S))
+    np.testing.assert_allclose(np.asarray(final_logits), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,157 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True on CPU) vs ref.py
+pure-jnp oracles, across shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (exit_decision_op, flash_attention_op,
+                           gather_compact_op)
+from repro.kernels.exit_decision.ref import exit_decision_ref
+from repro.kernels.flash_attention.ref import mha_ref
+from repro.kernels.gather_compact.ref import gather_compact_ref
+
+
+# ---------------------------------------------------------------------------
+# exit decision kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows", [1, 3, 8])
+@pytest.mark.parametrize("vocab", [8, 100, 1000, 4096])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_exit_decision_shapes_dtypes(rows, vocab, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(rows * vocab), (rows, vocab))
+         * 4.0).astype(dtype)
+    for c_thr in (0.1, 0.5, 0.9, 0.99):
+        ek, pk, ck = exit_decision_op(x, c_thr)
+        er, pr, cr = exit_decision_ref(x.reshape(rows, vocab), c_thr)
+        np.testing.assert_array_equal(np.asarray(ek), np.asarray(er))
+        np.testing.assert_array_equal(np.asarray(pk), np.asarray(pr))
+        np.testing.assert_allclose(np.asarray(ck), np.asarray(cr),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_exit_decision_extreme_logits_stable():
+    """Raw Eq. (4) overflows exp(x) for big logits; the max-shifted kernel
+    must not."""
+    x = jnp.array([[500.0, -500.0, 0.0], [90.0, 89.0, 88.0]], jnp.float32)
+    e, p, c = exit_decision_op(x, 0.9)
+    assert bool(jnp.isfinite(c).all())
+    assert int(p[0]) == 0 and bool(e[0])        # one-hot -> confident exit
+    assert float(c[0]) > 0.999
+
+
+def test_exit_decision_uniform_logits_never_exit():
+    x = jnp.zeros((4, 10), jnp.float32)
+    e, p, c = exit_decision_op(x, 0.5)
+    np.testing.assert_allclose(np.asarray(c), 0.1, rtol=1e-5)
+    assert not bool(e.any())
+
+
+def test_exit_decision_leading_dims():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 64), jnp.float32)
+    e, p, c = exit_decision_op(x, 0.5)
+    assert e.shape == (2, 3) and p.shape == (2, 3) and c.shape == (2, 3)
+
+
+# ---------------------------------------------------------------------------
+# gather-compact (conditional buffer) kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("batch", [1, 7, 16, 64])
+@pytest.mark.parametrize("feat", [1, 8, 33])
+@pytest.mark.parametrize("p_hard", [0.0, 0.3, 1.0])
+def test_gather_compact_sweep(batch, feat, p_hard):
+    key = jax.random.PRNGKey(batch * feat + 1)
+    x = jax.random.normal(key, (batch, feat), jnp.float32)
+    mask = jax.random.bernoulli(jax.random.fold_in(key, 1), p_hard, (batch,))
+    for capacity in {max(1, batch // 2), batch}:
+        sk, ik, nk = gather_compact_op(x, mask, capacity)
+        sr, ir, nr = gather_compact_ref(x.reshape(batch, -1), mask, capacity)
+        np.testing.assert_allclose(np.asarray(sk).reshape(capacity, -1),
+                                   np.asarray(sr))
+        np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))
+        assert int(nk) == int(nr) == int(mask.sum())
+
+
+def test_gather_compact_dtypes():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 4)).astype(jnp.bfloat16)
+    mask = jnp.array([1, 0, 1, 0, 0, 1, 0, 0], bool)
+    s, ids, n = gather_compact_op(x, mask, 4)
+    assert s.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(ids), [0, 2, 5, -1])
+
+
+def test_gather_compact_semantics():
+    """Slab rows [0, n_hard) are exactly the hard rows in original order;
+    flush slots are id -1."""
+    x = jnp.arange(12, dtype=jnp.float32).reshape(6, 2)
+    mask = jnp.array([0, 1, 0, 1, 1, 0], bool)
+    s, ids, n = gather_compact_op(x, mask, 6)
+    assert int(n) == 3
+    np.testing.assert_array_equal(np.asarray(ids), [1, 3, 4, -1, -1, -1])
+    np.testing.assert_allclose(np.asarray(s)[:3], np.asarray(x)[[1, 3, 4]])
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seq", [64, 128, 200, 384])
+@pytest.mark.parametrize("heads,kv_heads", [(4, 4), (4, 2), (8, 1)])
+def test_flash_attention_shapes(seq, heads, kv_heads):
+    k = jax.random.PRNGKey(seq + heads)
+    q = jax.random.normal(k, (2, seq, heads, 32), jnp.float32)
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (2, seq, kv_heads, 32),
+                           jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(k, 2), (2, seq, kv_heads, 32),
+                          jnp.float32)
+    out = flash_attention_op(q, kk, v, causal=True)
+    ref = flash_attention_op(q, kk, v, causal=True, use_pallas=False)
+    assert out.shape == q.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_flash_attention_window(window):
+    k = jax.random.PRNGKey(0)
+    q = jax.random.normal(k, (1, 256, 2, 32), jnp.float32)
+    kv = jax.random.normal(jax.random.fold_in(k, 1), (1, 256, 2, 32),
+                           jnp.float32)
+    out = flash_attention_op(q, kv, kv, causal=True, window=window)
+    ref = flash_attention_op(q, kv, kv, causal=True, window=window,
+                             use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    k = jax.random.PRNGKey(7)
+    q = jax.random.normal(k, (1, 128, 2, 64)).astype(jnp.bfloat16)
+    kv = jax.random.normal(jax.random.fold_in(k, 1), (1, 128, 2, 64)
+                           ).astype(jnp.bfloat16)
+    out = flash_attention_op(q, kv, kv, causal=True)
+    ref = flash_attention_op(q, kv, kv, causal=True, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_flash_attention_vs_naive_softmax():
+    """Independent oracle: materialized softmax attention."""
+    k = jax.random.PRNGKey(3)
+    q = jax.random.normal(k, (1, 128, 2, 16), jnp.float32)
+    kv = jax.random.normal(jax.random.fold_in(k, 1), (1, 128, 2, 16),
+                           jnp.float32)
+    out = flash_attention_op(q, kv, kv, causal=True)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = kv.transpose(0, 2, 1, 3)
+    vt = kv.transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qt, kt) / jnp.sqrt(16.0)
+    mask = jnp.tril(jnp.ones((128, 128), bool))
+    scores = jnp.where(mask, scores, -jnp.inf)
+    naive = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(scores, axis=-1), vt)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(naive.transpose(0, 2, 1, 3)),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,106 @@
+"""End-to-end toolflow test — the paper's §IV study in miniature:
+train B-LeNet on MNIST-like data -> profile p -> ATHEENA optimize (TAP ⊕)
+-> verify throughput gain vs baseline and Fig. 4 q-robustness ordering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dse, exit_decision as ed, losses, profiler as prof
+from repro.core.conditional import simulate_two_stage_queue
+from repro.data.pipeline import mnist_like
+from repro.models import cnn as C
+
+
+@pytest.fixture(scope="module")
+def trained_blenet():
+    """A few hundred SGD steps on synthetic MNIST-like data: enough for
+    confident easy-sample exits, cheap enough for CI."""
+    cfg = C.b_lenet()
+    data = mnist_like(2048, seed=0, hard_frac=0.3)
+    params = C.init_cnn(jax.random.PRNGKey(0), cfg)
+
+    @jax.jit
+    def step(p, x, y, lr):
+        def loss_fn(p):
+            outs = C.forward_all_exits(p, cfg, x)
+            return losses.cnn_joint_loss(outs, y, (0.3, 1.0))[0]
+        g = jax.grad(loss_fn)(p)
+        return jax.tree.map(lambda a, b: a - lr * b, p, g)
+
+    x, y = jnp.asarray(data["x"]), jnp.asarray(data["y"])
+    for i in range(120):
+        lo = (i * 128) % 1920
+        params = step(params, x[lo:lo + 128], y[lo:lo + 128], 0.05)
+    return cfg, params, data
+
+
+def test_toolflow_end_to_end(trained_blenet):
+    cfg, params, data = trained_blenet
+    x, y = jnp.asarray(data["x"]), jnp.asarray(data["y"])
+
+    # --- profile (§III-B.1): exit probability + accuracies ---
+    outs = C.forward_all_exits(params, cfg, x)
+    exit_logits, final_logits = outs[0], outs[-1]
+    c_thr = ed.calibrate_threshold(ed.softmax_confidence(exit_logits),
+                                   target_exit_rate=0.75)
+    profile = prof.profile_early_exit(exit_logits, final_logits, y, c_thr)
+    assert 0.15 < profile.p_hard < 0.35
+    # EE accuracy within 3 points of the full network (paper: ~match)
+    assert profile.cumulative_accuracy > profile.baseline_accuracy - 0.03
+
+    # --- ATHEENA optimize (Fig. 5): TAP curves + Eq. (1) ---
+    des = dse.atheena_optimize_cnn(cfg, p=max(profile.p_hard, 0.05),
+                                   budget=256, n_seeds=2)
+    gain = des.gain_vs_baseline()
+    assert gain > 1.3, f"combined design only {gain:.2f}x baseline"
+
+    # --- Fig. 4 robustness: queue-simulated runtime throughput ---
+    d = des.combined
+    rng = np.random.default_rng(0)
+    thr = {}
+    for q in (0.20, 0.25, 0.30):
+        n_test = 1024
+        seq = (rng.random(n_test) < q).astype(int)
+        r = simulate_two_stage_queue(
+            seq, stage1_rate=d.stage1.throughput,
+            stage2_rate=d.stage2.throughput,
+            buffer_depth=max(8, int(0.15 * n_test)))
+        thr[q] = r["throughput"]
+    assert thr[0.20] >= thr[0.25] * 0.98
+    assert thr[0.25] >= thr[0.30] * 0.98
+    # queue sim approximates the Eq. (1) design point at q == p
+    assert thr[0.25] > 0.75 * d.throughput_at(0.25)
+
+
+def test_ee_serving_accuracy_matches_profile(trained_blenet):
+    """Hardware-style EE serving (mask + merge) reproduces the profiler's
+    cumulative accuracy exactly (same decisions, vectorized path)."""
+    cfg, params, data = trained_blenet
+    x, y = jnp.asarray(data["x"][:512]), np.asarray(data["y"][:512])
+    outs = C.forward_all_exits(params, cfg, x)
+    exit_logits, final_logits = outs[0], outs[-1]
+    c_thr = 0.9
+    mask = np.asarray(ed.exit_decision(exit_logits, c_thr))
+    pred = np.where(mask, np.asarray(jnp.argmax(exit_logits, -1)),
+                    np.asarray(jnp.argmax(final_logits, -1)))
+    acc_serve = float((pred == y).mean())
+    profile = prof.profile_early_exit(exit_logits, final_logits,
+                                      jnp.asarray(y), c_thr)
+    assert abs(acc_serve - profile.cumulative_accuracy) < 1e-9
+
+
+def test_baseline_vs_ee_compute_saving(trained_blenet):
+    """Average per-sample MACs with early exit < backbone MACs (the whole
+    point): expected MACs = stage1 + exit + p * stage2."""
+    from repro.core import perf_model as pm
+    cfg, params, data = trained_blenet
+    x, y = jnp.asarray(data["x"]), jnp.asarray(data["y"])
+    outs = C.forward_all_exits(params, cfg, x)
+    c_thr = ed.calibrate_threshold(ed.softmax_confidence(outs[0]), 0.75)
+    p_hard = float((~np.asarray(ed.exit_decision(outs[0], c_thr))).mean())
+    w1 = sum(pm.cnn_stage_workloads(cfg, 0)) + sum(pm.cnn_exit_workloads(cfg, 0))
+    w2 = sum(pm.cnn_stage_workloads(cfg, 1))
+    ee_macs = w1 + p_hard * w2
+    base_macs = sum(pm.cnn_stage_workloads(cfg, 0)) + w2
+    assert ee_macs < base_macs
