@@ -1,10 +1,16 @@
 """Benchmark harness entry point: one benchmark per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--fast]``
+``PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME] [--json]``
+
+``--json`` emits one machine-readable object on stdout — per-bench wall
+seconds, pass/fail, and whatever structured fields the benchmark returned
+besides its table text — so CI can record the perf trajectory over time.
+The human tables go to stderr in that mode.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -13,13 +19,15 @@ import traceback
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
-                    help="fewer SA seeds (CI smoke)")
+                    help="fewer SA seeds / smaller serving sets (CI smoke)")
     ap.add_argument("--only", default=None, help="run a single benchmark")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable per-bench results on stdout")
     args = ap.parse_args(argv)
 
-    from benchmarks import (fig9_tap, roofline, table1_resources,
-                            table2_overhead, table3_throughput,
-                            table4_networks)
+    from benchmarks import (fig9_tap, roofline, serve_pipeline,
+                            table1_resources, table2_overhead,
+                            table3_throughput, table4_networks)
     seeds = 1 if args.fast else 3
     benches = [
         ("fig9_tap", lambda: fig9_tap.run(n_seeds=seeds)),
@@ -28,7 +36,13 @@ def main(argv=None) -> int:
         ("table3_throughput", table3_throughput.run),
         ("table4_networks", lambda: table4_networks.run(n_seeds=seeds)),
         ("roofline", roofline.run),
+        ("serve_pipeline", lambda: serve_pipeline.run(fast=args.fast)),
     ]
+    if args.only and args.only not in {n for n, _ in benches}:
+        ap.error(f"unknown benchmark {args.only!r}; "
+                 f"choose from {[n for n, _ in benches]}")
+    text_out = sys.stderr if args.json else sys.stdout
+    report = {}
     failures = 0
     for name, fn in benches:
         if args.only and name != args.only:
@@ -36,12 +50,19 @@ def main(argv=None) -> int:
         t0 = time.time()
         try:
             out = fn()
-            print(out["text"])
-            print(f"[{name}: {time.time() - t0:.1f}s]\n", flush=True)
+            dt = time.time() - t0
+            print(out["text"], file=text_out)
+            print(f"[{name}: {dt:.1f}s]\n", file=text_out, flush=True)
+            report[name] = {"seconds": round(dt, 3), "ok": True,
+                            **{k: v for k, v in out.items() if k != "text"}}
         except Exception:
             failures += 1
-            print(f"[{name}: FAILED]", flush=True)
+            report[name] = {"seconds": round(time.time() - t0, 3),
+                            "ok": False}
+            print(f"[{name}: FAILED]", file=text_out, flush=True)
             traceback.print_exc()
+    if args.json:
+        print(json.dumps(report, indent=1, default=float))
     return 1 if failures else 0
 
 

@@ -1,0 +1,103 @@
+"""Serving-pipeline throughput: host-loop vs device-resident server.
+
+Measures end-to-end samples/sec of the seed's per-sample host-loop server
+(``runtime.serve_loop.HostLoopServer``: per-row host syncs + Python deque +
+per-bucket restacking) against the device-resident ``TwoStageServer``
+(fused exit decision + compaction through ``kernels.dispatch``, device ring
+buffer, async bucket drains) across hard-sample rates q ∈ {0.1, 0.3, 0.5}.
+C_thr is calibrated per q on the exit-head confidences so realized q matches
+the target, and the stage-2 bucket is sized at ceil(q·B) — the paper's
+matched p=q operating point.
+
+Both servers share the same jitted stage callables, so the delta is purely
+the exit machinery — the thing ATHEENA keeps on-chip. Run via
+``PYTHONPATH=src python -m benchmarks.run --only serve_pipeline [--json]``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import table
+from repro.core import early_exit as ee
+from repro.core import exit_decision as ed
+from repro.models.config import ArchConfig
+from repro.runtime import serve_loop as SL
+
+Q_GRID = (0.1, 0.3, 0.5)
+
+
+def _bench_cfg() -> ArchConfig:
+    """Small enough that the exit machinery (the thing under test) is a
+    visible share of the batch period on CPU; the model compute itself is
+    identical between the two servers."""
+    return ArchConfig(
+        name="serve-bench", family="dense", n_layers=4, d_model=32,
+        n_heads=4, n_kv_heads=2, d_ff=64, vocab=256,
+        dtype="float32", param_dtype="float32", tie_embeddings=True,
+    )
+
+
+def _time_serve(make_server, toks: np.ndarray, batch: int, iters: int
+                ) -> tuple:
+    """Best-of-iters wall time over the whole token set (fresh server per
+    iteration; the jitted stage fns are shared, so no recompilation)."""
+    SL.serve_dataset(make_server(), toks[:2 * batch], batch=batch)  # warmup
+    best, stats = float("inf"), None
+    for _ in range(iters):
+        server = make_server()
+        t0 = time.perf_counter()
+        results = SL.serve_dataset(server, toks, batch=batch)
+        best = min(best, time.perf_counter() - t0)
+        stats = server.stats
+        assert len(results) == toks.shape[0], "dropped requests"
+    return toks.shape[0] / best, stats
+
+
+def run(fast: bool = False) -> dict:
+    n = 512 if fast else 1024
+    batch, seq = 128, 16
+    iters = 2 if fast else 3
+    cfg = _bench_cfg()
+    spec0 = ee.EarlyExitSpec(exit_layer=2, c_thr=0.5)
+    params = ee.init_ee_params(jax.random.PRNGKey(0), cfg, spec0)
+    toks = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (n, seq), 0,
+                                         cfg.vocab))
+    _, _, exit_logits, _ = ee.stage1_prefill(params, cfg, spec0,
+                                             jnp.asarray(toks))
+    conf = ed.softmax_confidence(exit_logits)
+
+    rows, data = [], {}
+    for q in Q_GRID:
+        # C_thr at the q-quantile of confidence => a q fraction stays hard
+        c_thr = float(jnp.quantile(conf, q))
+        spec = ee.EarlyExitSpec(exit_layer=spec0.exit_layer, c_thr=c_thr)
+        capacity = max(8, int(np.ceil(q * batch)))
+        sc = SL.ServeConfig(capacity=capacity, queue_depth=4, c_thr=c_thr)
+        s1, s2 = SL._stage_fns(params, cfg, spec)
+        host_sps, host_stats = _time_serve(
+            lambda: SL.HostLoopServer(s1, s2, sc), toks, batch, iters)
+        dev_sps, dev_stats = _time_serve(
+            lambda: SL.TwoStageServer(s1, s2, sc), toks, batch, iters)
+        speedup = dev_sps / host_sps
+        rows.append([f"{q:.1f}", f"{dev_stats.realized_q:.2f}", capacity,
+                     f"{host_sps:,.0f}", f"{dev_sps:,.0f}",
+                     f"{speedup:.2f}x",
+                     f"{dev_stats.mean_bucket_fill:.2f}"])
+        data[f"q{q}"] = {"host_sps": host_sps, "device_sps": dev_sps,
+                         "speedup": speedup,
+                         "realized_q": dev_stats.realized_q}
+
+    txt = table(
+        "Serving pipeline: host-loop vs device-resident "
+        f"(B={batch}, S={seq}, N={n}, backend={jax.default_backend()})",
+        ["q", "realized q", "bucket C", "host sps", "device sps", "speedup",
+         "bucket fill"], rows)
+    return {"text": txt, **data}
+
+
+if __name__ == "__main__":
+    print(run()["text"])

@@ -5,9 +5,11 @@ two-stage Early-Exit pipeline (the paper's deployment scenario).
 
 Flow: init a reduced qwen2-family model -> calibrate C_thr on a profiling
 batch so p_hard ~ 0.25 -> size the stage-2 bucket from p (+slack) -> serve
-batched requests through TwoStageServer -> report throughput, realized q,
-bucket occupancy, and verify every request got an answer consistent with
-the one-shot pipeline."""
+batched requests through the device-resident TwoStageServer (fused exit
+decision + compaction via the kernel dispatch layer, device ring buffer,
+async bucket drains) -> report throughput, realized q, bucket occupancy,
+and verify every request got an answer consistent with the one-shot
+pipeline."""
 import argparse
 import time
 
@@ -60,7 +62,7 @@ print(f"served {args.requests} requests in {dt:.2f}s "
       f"({args.requests / dt:,.0f} samples/s on this host)")
 print(f"realized q={s.realized_q:.3f}  exited early: {s.n_exited}  "
       f"stage-2: {s.n_stage2}  stalls: {s.n_stalls}  "
-      f"mean bucket fill {np.mean(s.bucket_fill):.2f}")
+      f"mean bucket fill {s.mean_bucket_fill:.2f}")
 
 # --- consistency vs the one-shot fused pipeline ------------------------------
 one = ee.serve_batch(params, cfg, spec, jnp.asarray(toks[:args.batch]),

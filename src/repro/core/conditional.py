@@ -10,6 +10,15 @@ through the pipeline so out-of-order completions can be merged.
 The queue simulator at the bottom models the buffer occupancy / stall
 behaviour (paper Fig. 7 deadlock-avoidance sizing and the Fig. 4 q-vs-p
 robustness band) for the serving runtime.
+
+NOTE: this module is the framework-level reference. The serving hot path
+(core/early_exit.serve_batch and runtime/serve_loop.TwoStageServer) performs
+the compaction through ``kernels.dispatch.gather_compact_op`` — the Pallas
+stream-compaction kernel on TPU, its jnp oracle under XLA elsewhere — and
+carries hard samples between batches in the device-side ring buffer
+(runtime/serve_loop.ring_enqueue / ring_drain). The functions here remain
+the semantics contract those kernels are tested against, and the off-hot-
+path API (property tests, the dry-run planner, pytree inputs).
 """
 from __future__ import annotations
 

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import conditional as cond
-from repro.core import exit_decision as ed
+from repro.kernels import dispatch
 from repro.models import transformer as T
 from repro.models.config import ArchConfig
 from repro.models.layers import init_rmsnorm, rmsnorm, unembed
@@ -187,20 +187,28 @@ def serve_batch(params, cfg: ArchConfig, spec: EarlyExitSpec, tokens, *,
     """Full EE pipeline on one batch (prefill-style): stage 1 for all, exit
     decision, conditional buffer compaction, stage 2 for the hard slab, exit
     merge by sample id. Returns dict with merged last-token logits, the exit
-    mask, and occupancy stats."""
+    mask, and occupancy stats.
+
+    The decision + compaction route through the kernel dispatch layer
+    (``kernels.dispatch``): the fused Pallas kernels on TPU, their jnp
+    oracles under XLA on CPU — never a per-sample host loop and never a
+    materialized (B, V) softmax."""
     B = tokens.shape[0]
     sample_ids = jnp.arange(B, dtype=jnp.int32)
     h, _, exit_logits, memory = stage1_prefill(params, cfg, spec, tokens,
                                                frontend_embeds=frontend_embeds)
-    exit_mask, pred, conf = ed.decision_and_argmax(exit_logits, spec.c_thr)
+    exit_mask, pred, conf = dispatch.exit_decision_op(exit_logits, spec.c_thr)
     hard_mask = ~exit_mask
     cap = capacity if capacity is not None else B
-    slab, slab_ids, n_hard, overflow = cond.conditional_buffer(
-        h, sample_ids, hard_mask, cap)
+    slab, slab_ids, n_hard = dispatch.gather_compact_op(h, hard_mask, cap)
+    overflow = jnp.maximum(n_hard - cap, 0)
     mem_slab = None
     if memory is not None:
-        mem_slab, _, _, _ = cond.conditional_buffer(memory, sample_ids,
-                                                    hard_mask, cap)
+        # reuse the hidden slab's permutation: sample_ids is arange(B), so
+        # slab_ids ARE the surviving row indices (flush slots -1 -> row 0,
+        # matching the conditional-buffer padding contract)
+        take = jnp.maximum(slab_ids, 0)
+        mem_slab = jax.tree.map(lambda x: jnp.take(x, take, axis=0), memory)
     final_logits, _ = stage2_prefill(params, cfg, spec, slab, memory=mem_slab)
     easy_ids = jnp.where(exit_mask, sample_ids, -1)
     merged = cond.exit_merge(B, easy_ids, exit_logits, slab_ids, final_logits)

@@ -59,13 +59,17 @@ def exit_decision_entropy(logits: jnp.ndarray, e_thr: float) -> jnp.ndarray:
 def decision_and_argmax(logits: jnp.ndarray, c_thr: float
                         ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """(exit_mask bool, predicted class int32, confidence fp32) in one pass.
-    This is the fused triple the hardware layer produces."""
+    This is the fused triple the hardware layer produces. The mask uses the
+    division-free form ``1 > c_thr * s`` — the same fp32 expression as
+    ``exit_decision`` and the Pallas kernel ref — rather than the rounded
+    ``1/s > c_thr``, so every decision path in the repo agrees bitwise on
+    threshold-boundary samples."""
     x = logits.astype(jnp.float32)
     m = jnp.max(x, axis=-1)
     s = jnp.sum(jnp.exp(x - m[..., None]), axis=-1)
     conf = 1.0 / s
     pred = jnp.argmax(x, axis=-1).astype(jnp.int32)
-    return conf > c_thr, pred, conf
+    return jnp.float32(c_thr) * s < 1.0, pred, conf
 
 
 def calibrate_threshold(confidences: jnp.ndarray, target_exit_rate: float) -> float:

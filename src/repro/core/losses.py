@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.models import hints
 from repro.models.config import ArchConfig
 from repro.models.layers import unembed
@@ -136,7 +137,7 @@ def vocab_parallel_ce(params_bb, cfg: ArchConfig, hidden, labels, mask=None,
             (hs, ys, ws))
         return tot[None], cnt[None]
 
-    tot, cnt = jax.shard_map(
+    tot, cnt = compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(bspec, None, None), P(bspec, None), P(bspec, None),
                   P("model", None)),

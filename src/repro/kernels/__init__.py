@@ -8,9 +8,17 @@ gather_compact  — stream compaction; the Conditional Buffer (§III-C.2).
 Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper with CPU-interpret dispatch) and ref.py (pure-jnp oracle used by the
 allclose sweeps in tests/).
+
+``dispatch`` is the runtime-facing layer: it selects compiled Pallas on TPU
+and the fast jnp reference (or, on request, the interpreted kernel body) on
+CPU, so the serving hot path never pays the Pallas-interpreter tax off-TPU.
+The per-kernel ``*_op`` wrappers re-exported here keep their historical
+``use_pallas`` switch for the parity tests.
 """
+from repro.kernels import dispatch
 from repro.kernels.exit_decision import exit_decision_op
 from repro.kernels.flash_attention import flash_attention_op
 from repro.kernels.gather_compact import gather_compact_op
 
-__all__ = ["exit_decision_op", "flash_attention_op", "gather_compact_op"]
+__all__ = ["dispatch", "exit_decision_op", "flash_attention_op",
+           "gather_compact_op"]

@@ -1,0 +1,107 @@
+"""Kernel dispatch: one policy deciding which implementation serves a call.
+
+The serving runtime (runtime/serve_loop.py) and the one-shot pipeline
+(core/early_exit.serve_batch) route every exit-decision and conditional-
+buffer call through this module instead of picking an implementation at the
+call site. Three backends exist per kernel:
+
+  pallas     — the compiled Pallas TPU kernel (kernel.py). Only meaningful
+               on a TPU backend; requesting it elsewhere degrades to
+               ``interpret``.
+  interpret  — the same Pallas kernel body run under the Pallas interpreter.
+               Validates the kernel on CPU but is orders of magnitude slower
+               than XLA; used by the parity tests, never by the hot path.
+  ref        — the pure-jnp oracle (ref.py). Fast under XLA on CPU/GPU and
+               the semantics contract the kernels are tested against.
+
+Resolution order: explicit ``backend=`` argument > ``set_backend()`` >
+``REPRO_KERNEL_BACKEND`` env var > ``auto``. ``auto`` picks ``pallas`` on
+TPU and ``ref`` everywhere else — i.e. the hot path always runs compiled
+code, and the interpreter is something you must ask for.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.exit_decision.kernel import exit_decision_pallas
+from repro.kernels.exit_decision.ref import exit_decision_ref
+from repro.kernels.gather_compact.kernel import gather_compact_pallas
+from repro.kernels.gather_compact.ref import gather_compact_ref
+
+BACKENDS = ("auto", "pallas", "interpret", "ref")
+_ENV_VAR = "REPRO_KERNEL_BACKEND"
+_override: Optional[str] = None
+
+
+def set_backend(name: Optional[str]) -> None:
+    """Process-wide backend override (None restores auto/env resolution)."""
+    global _override
+    if name is not None and name not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {name!r}; "
+                         f"expected one of {BACKENDS}")
+    _override = name
+
+
+def kernel_backend(backend: Optional[str] = None) -> str:
+    """Resolve to a concrete backend: 'pallas' | 'interpret' | 'ref'."""
+    req = backend or _override or os.environ.get(_ENV_VAR, "auto")
+    if req not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {req!r}; "
+                         f"expected one of {BACKENDS}")
+    on_tpu = jax.default_backend() == "tpu"
+    if req == "auto":
+        return "pallas" if on_tpu else "ref"
+    if req == "pallas" and not on_tpu:
+        return "interpret"          # kernel body still runs, just interpreted
+    return req
+
+
+# ---------------------------------------------------------------------------
+# dispatched ops (the serving hot path calls these)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _exit_decision(logits, c_thr, backend: str):
+    if backend == "ref":
+        return exit_decision_ref(logits, c_thr)
+    return exit_decision_pallas(logits, c_thr,
+                                interpret=(backend == "interpret"))
+
+
+def exit_decision_op(logits: jnp.ndarray, c_thr, *,
+                     backend: Optional[str] = None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused exit decision (Eq. 4). logits: (..., V) -> (exit bool, pred
+    i32, conf f32), each shaped (...,). One streamed read of the logits;
+    no materialized softmax on any backend."""
+    lead = logits.shape[:-1]
+    x = logits.reshape((-1, logits.shape[-1]))
+    e, p, c = _exit_decision(x, c_thr, kernel_backend(backend))
+    return e.reshape(lead), p.reshape(lead), c.reshape(lead)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "backend"))
+def _gather_compact(x, hard_mask, capacity: int, backend: str):
+    if backend == "ref":
+        return gather_compact_ref(x, hard_mask, capacity)
+    return gather_compact_pallas(x, hard_mask, capacity,
+                                 interpret=(backend == "interpret"))
+
+
+def gather_compact_op(x: jnp.ndarray, hard_mask: jnp.ndarray, capacity: int,
+                      *, backend: Optional[str] = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Conditional-buffer compaction. x: (B, ...); hard_mask: (B,) bool.
+    Returns (slab (capacity, ...), slab_ids (capacity,) int32 with -1 flush
+    slots, n_hard ())."""
+    B = x.shape[0]
+    feat = x.shape[1:]
+    xf = x.reshape(B, -1)
+    slab, ids, nh = _gather_compact(xf, hard_mask, capacity,
+                                    kernel_backend(backend))
+    return slab.reshape((capacity,) + feat), ids, nh

@@ -1,34 +1,24 @@
-"""Jit'd public wrapper for the Exit Decision kernel.
+"""Back-compat wrapper for the Exit Decision kernel.
 
-Dispatches to the Pallas kernel (interpret=True on CPU so the kernel body is
-validated here; compiled on TPU), with the pure-jnp oracle available as the
-off-hot-path fallback. Leading batch dims are flattened.
+Delegates to the dispatch layer (kernels/dispatch.py). ``use_pallas=True``
+exercises the Pallas kernel body (interpreted on CPU, compiled on TPU) —
+this is what the parity sweeps in tests/ rely on; ``use_pallas=False`` runs
+the pure-jnp oracle. The serving hot path should call
+``dispatch.exit_decision_op`` instead, whose ``auto`` policy never pays the
+interpreter tax off-TPU.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 
-from repro.kernels.exit_decision.kernel import exit_decision_pallas
-from repro.kernels.exit_decision.ref import exit_decision_ref
+from repro.kernels import dispatch
 
 
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
-
-
-@functools.partial(jax.jit, static_argnames=("use_pallas",))
 def exit_decision_op(logits: jnp.ndarray, c_thr, *, use_pallas: bool = True
                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Fused exit decision. logits: (..., V) -> (exit bool, pred i32,
     conf f32), each shaped (...,)."""
-    lead = logits.shape[:-1]
-    x = logits.reshape((-1, logits.shape[-1]))
-    if use_pallas:
-        e, p, c = exit_decision_pallas(x, c_thr, interpret=_on_cpu())
-    else:
-        e, p, c = exit_decision_ref(x, c_thr)
-    return e.reshape(lead), p.reshape(lead), c.reshape(lead)
+    backend = "pallas" if use_pallas else "ref"
+    return dispatch.exit_decision_op(logits, c_thr, backend=backend)

@@ -1,36 +1,24 @@
-"""Jit'd public wrapper for stream compaction (Conditional Buffer).
+"""Back-compat wrapper for stream compaction (Conditional Buffer).
 
-Flattens trailing feature dims, dispatches Pallas (interpret on CPU) or the
-jnp oracle, and restores the feature shape on the slab.
+Delegates to the dispatch layer (kernels/dispatch.py). ``use_pallas=True``
+exercises the Pallas kernel body (interpreted on CPU, compiled on TPU);
+``use_pallas=False`` runs the pure-jnp oracle. The serving hot path should
+call ``dispatch.gather_compact_op`` instead.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 
-from repro.kernels.gather_compact.kernel import gather_compact_pallas
-from repro.kernels.gather_compact.ref import gather_compact_ref
+from repro.kernels import dispatch
 
 
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
-
-
-@functools.partial(jax.jit, static_argnames=("capacity", "use_pallas"))
 def gather_compact_op(x: jnp.ndarray, hard_mask: jnp.ndarray, capacity: int,
                       *, use_pallas: bool = True
                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """x: (B, ...); hard_mask: (B,). Returns (slab (C, ...), slab_ids (C,),
     n_hard ())."""
-    B = x.shape[0]
-    feat = x.shape[1:]
-    xf = x.reshape(B, -1)
-    if use_pallas:
-        slab, ids, nh = gather_compact_pallas(xf, hard_mask, capacity,
-                                              interpret=_on_cpu())
-    else:
-        slab, ids, nh = gather_compact_ref(xf, hard_mask, capacity)
-    return slab.reshape((capacity,) + feat), ids, nh
+    backend = "pallas" if use_pallas else "ref"
+    return dispatch.gather_compact_op(x, hard_mask, capacity,
+                                      backend=backend)

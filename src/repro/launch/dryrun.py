@@ -17,6 +17,7 @@ from typing import Any, Dict, Optional
 
 import jax
 
+from repro import compat
 from repro.configs.archs import ARCHS, SHAPES, shape_applicable
 from repro.launch import hlo as H
 from repro.launch import hlo_analysis as HA
@@ -47,7 +48,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = compat.xla_cost_analysis(compiled)
     text = compiled.as_text()
     # loop-aware analysis: XLA's cost_analysis counts while (lax.scan)
     # bodies ONCE; hlo_analysis multiplies by known trip counts.

@@ -1,10 +1,11 @@
 """Serving driver: ``PYTHONPATH=src python -m repro.launch.serve
 --arch qwen2-1.5b --smoke --requests 256``.
 
-Builds the two-stage EE server (stage 1 full rate, stage 2 bucketed at
-capacity = ceil((p+slack)·B)), pushes batched requests with a controlled
-hard-fraction q, and reports throughput + stage-2 occupancy — the runtime
-half of the ATHEENA pipeline."""
+Builds the device-resident two-stage EE server (stage 1 full rate, stage 2
+bucketed at capacity = ceil((p+slack)·B), hard samples carried between
+batches in the device ring buffer), pushes batched requests with a
+controlled hard-fraction q, and reports throughput + stage-2 occupancy —
+the runtime half of the ATHEENA pipeline."""
 from __future__ import annotations
 
 import argparse

@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.models import hints
 from repro.models.config import ArchConfig
 from repro.models.layers import (apply_rope, blocked_attention, decode_attention,
@@ -54,7 +55,7 @@ def attention_core(q, k, v, *, causal: bool, window: Optional[int],
         # comm at all, per-sample VMEM tiles (training decomposition)
         bspec = (*baxes, "model")
         spec = P(bspec, None, None, None)
-        return jax.shard_map(
+        return compat.shard_map(
             lambda a, b, c: kern(a, b, c, 0), mesh=mesh,
             in_specs=(spec, spec, spec), out_specs=spec,
             check_vma=False)(q, k, v)
@@ -63,7 +64,7 @@ def attention_core(q, k, v, *, causal: bool, window: Optional[int],
     axis = "model"
     s_local = q.shape[1] // mesh.shape[axis]
     bspec = baxes if baxes else None
-    return jax.shard_map(
+    return compat.shard_map(
         lambda a, b, c: kern(a, b, c, jax.lax.axis_index(axis) * s_local),
         mesh=mesh,
         in_specs=(P(bspec, axis, None, None), P(bspec, None, None, None),

@@ -1,4 +1,5 @@
-"""Two-stage Early-Exit serving runtime (the paper's Fig. 3 pipeline).
+"""Two-stage Early-Exit serving runtime (the paper's Fig. 3 pipeline),
+device-resident.
 
 Stage 1 (full batch) -> Exit Decision -> Conditional Buffer (compaction into
 fixed-capacity hard-sample buckets) -> Stage 2 (buckets only) -> Exit Merge
@@ -10,23 +11,57 @@ and yields the Fig. 4 q-vs-p robustness behaviour:
   q > p : queue grows; when full, stage 1 stalls (backpressure) and
           throughput degrades by ~p/q — exactly the shaded band.
 
+**Device residency.** ATHEENA's throughput comes from keeping the exit
+machinery on-chip: the FPGA conditional buffer never round-trips a feature
+map through host memory. ``TwoStageServer`` mirrors that:
+
+  * the exit decision + compaction run as ONE jitted step per stage-1 batch
+    through the kernel dispatch layer (``kernels.dispatch``): the fused
+    ``exit_decision_op`` streams the (B, V) logits from HBM once — no
+    materialized softmax — and ``gather_compact_op`` emits the hard-sample
+    slab without leaving the device;
+  * hard samples carry over between stage-1 batches in a preallocated
+    **device-side ring buffer** — a ``(queue_depth * capacity, S, d)`` slab
+    plus int32 head/count cursors — updated in place by jitted
+    ``ring_enqueue`` / ``ring_drain`` steps with ``donate_argnums`` so no
+    copy of the queue ever exists. The old implementation (kept below as
+    ``HostLoopServer``, the benchmark baseline) instead synced each hidden
+    row to host, held it in a Python ``deque`` and re-stacked it per bucket;
+  * drains are asynchronous: stage 2 is dispatched on a bucket and only the
+    (ids, logits) futures are retained; nothing calls
+    ``block_until_ready``/``np.asarray`` until ``flush()``, so results leave
+    the device in one per-bucket transfer and stage 2 overlaps with
+    subsequent stage-1 batches. The single host sync per batch is the scalar
+    ``n_hard`` needed for backpressure control flow.
+
+**Ring sizing / deadlock avoidance (paper Fig. 7).** The ring holds
+``queue_depth * capacity`` samples. A stage-1 batch whose hard count exceeds
+the free space enqueues in chunks, stalling stage 1 between chunks while
+*full* buckets drain — partial (flush-padded) buckets waste stage-2 capacity
+and are used only when no full bucket exists. Any batch size is therefore
+correct even against a tiny ring (no deadlock, no drop); an undersized ring
+just stalls stage 1 harder — the paper's Fig. 7 minimum-depth sizing is a
+throughput constraint, surfaced by ``ServeStats.n_stalls``, not a
+correctness one.
+
 The runtime tracks realized q and reports occupancy/stall statistics so a
 deployment can re-plan (``core.stage_mesh``) when drift is persistent.
 """
 from __future__ import annotations
 
+import functools
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import conditional as cond
 from repro.core import early_exit as ee
 from repro.core import exit_decision as ed
+from repro.kernels import dispatch
 from repro.models.config import ArchConfig
 
 
@@ -35,6 +70,10 @@ class ServeConfig:
     capacity: int                   # stage-2 bucket size (ceil(p*B) rounded)
     queue_depth: int = 4            # buckets the buffer can hold
     c_thr: float = 0.9
+    max_pending: int = 16           # pending device result groups (stage-1
+                                    # batches + stage-2 buckets) before the
+                                    # oldest are harvested to host, bounding
+                                    # device memory on long-running streams
 
 
 @dataclass
@@ -43,7 +82,16 @@ class ServeStats:
     n_exited: int = 0
     n_stage2: int = 0
     n_stalls: int = 0
-    bucket_fill: List[float] = field(default_factory=list)
+    n_buckets: int = 0              # running aggregate, O(1) memory
+    bucket_fill_sum: float = 0.0
+
+    def record_bucket(self, fill: float) -> None:
+        self.n_buckets += 1
+        self.bucket_fill_sum += fill
+
+    @property
+    def mean_bucket_fill(self) -> float:
+        return self.bucket_fill_sum / self.n_buckets if self.n_buckets else 0.0
 
     @property
     def realized_q(self) -> float:
@@ -53,18 +101,246 @@ class ServeStats:
         return {"n_samples": self.n_samples, "n_exited": self.n_exited,
                 "n_stage2": self.n_stage2, "n_stalls": self.n_stalls,
                 "realized_q": self.realized_q,
-                "mean_bucket_fill": float(np.mean(self.bucket_fill))
-                if self.bucket_fill else 0.0}
+                "mean_bucket_fill": self.mean_bucket_fill}
 
+
+# ---------------------------------------------------------------------------
+# device-side ring buffer: preallocated slab + int32 cursors, updated in
+# place (donated) by jitted steps
+# ---------------------------------------------------------------------------
+
+def ring_init(size: int, row_shape: Tuple[int, ...], dtype) -> dict:
+    """Allocate the ring: {'hidden' (size, *row), 'ids' (size,), 'head' (),
+    'count' ()} — ids slots are -1 (the paper's unused Sample ID)."""
+    return {
+        "hidden": jnp.zeros((size,) + tuple(row_shape), dtype),
+        "ids": jnp.full((size,), -1, jnp.int32),
+        "head": jnp.zeros((), jnp.int32),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _ring_enqueue_range(buf: dict, slab, slab_ids, lo, hi) -> dict:
+    """Append slab rows [lo, min(hi, n_valid)) at the ring's tail, where
+    n_valid is the compacted slab's valid prefix (ids >= 0). The donated
+    buffer is updated in place; unselected rows scatter out of bounds and
+    are dropped. The caller guarantees the selected range fits."""
+    size = buf["ids"].shape[0]
+    n = slab_ids.shape[0]
+    n_valid = jnp.sum(slab_ids >= 0).astype(jnp.int32)
+    upper = jnp.minimum(hi, n_valid)
+    lanes = jnp.arange(n, dtype=jnp.int32)
+    sel = (lanes >= lo) & (lanes < upper)
+    idx = (buf["head"] + buf["count"] + lanes - lo) % size
+    idx = jnp.where(sel, idx, size)                  # OOB -> dropped
+    return {
+        "hidden": buf["hidden"].at[idx].set(slab, mode="drop"),
+        "ids": buf["ids"].at[idx].set(slab_ids, mode="drop"),
+        "head": buf["head"],
+        "count": buf["count"] + jnp.maximum(upper - lo, 0),
+    }
+
+
+def ring_enqueue(buf: dict, slab: jnp.ndarray, slab_ids: jnp.ndarray) -> dict:
+    """Append the whole valid prefix of a compacted slab (ids >= 0) at the
+    ring's tail; see ``_ring_enqueue_range``."""
+    return _ring_enqueue_range(buf, slab, slab_ids, 0, slab_ids.shape[0])
+
+
+@functools.partial(jax.jit, donate_argnums=(0,), static_argnames=("capacity",))
+def ring_drain(buf: dict, capacity: int
+               ) -> Tuple[dict, jnp.ndarray, jnp.ndarray]:
+    """Pop up to ``capacity`` samples from the ring's head into a stage-2
+    bucket. Returns (buf, bucket (capacity, *row), bucket_ids (capacity,))
+    — slots past the take carry id -1 (flush) and whatever stale rows the
+    ring holds (stage 2 is row-independent, flush rows are discarded by the
+    exit merge)."""
+    size = buf["ids"].shape[0]
+    take_n = jnp.minimum(buf["count"], capacity).astype(jnp.int32)
+    lanes = jnp.arange(capacity, dtype=jnp.int32)
+    idx = (buf["head"] + lanes) % size
+    valid = lanes < take_n
+    bucket = jnp.take(buf["hidden"], idx, axis=0)
+    bucket_ids = jnp.where(valid, jnp.take(buf["ids"], idx), -1)
+    new = {
+        "hidden": buf["hidden"],
+        "ids": buf["ids"].at[jnp.where(valid, idx, size)].set(
+            -1, mode="drop"),
+        "head": (buf["head"] + take_n) % size,
+        "count": buf["count"] - take_n,
+    }
+    return new, bucket, bucket_ids
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _decide_compact(hidden, exit_logits, sample_ids, c_thr, *, backend):
+    """Fused exit decision + conditional-buffer compaction, one device
+    program shared by every server instance (c_thr is traced, so a new
+    threshold never recompiles; the resolved kernel backend is a static
+    arg, so a dispatch override is honored rather than baked in at first
+    trace). Compaction capacity = the stage-1 batch, so no hard sample is
+    ever dropped here; the ring applies backpressure."""
+    exit_mask, _, _ = dispatch.exit_decision_op(exit_logits, c_thr,
+                                                backend=backend)
+    b = hidden.shape[0]
+    slab, pos, n_hard = dispatch.gather_compact_op(hidden, ~exit_mask, b,
+                                                   backend=backend)
+    slab_ids = jnp.where(pos >= 0,
+                         jnp.take(sample_ids, jnp.maximum(pos, 0)), -1)
+    return slab, slab_ids, n_hard, exit_mask
+
+
+# ---------------------------------------------------------------------------
+# device-resident two-stage server
+# ---------------------------------------------------------------------------
 
 class TwoStageServer:
-    """Batch-level EE server over jitted stage callables.
+    """Batch-level EE server over jitted stage callables, device-resident.
 
     stage1_fn: tokens (B, S) -> (hidden, exit_logits)
     stage2_fn: hidden slab (C, S, d) -> final logits (C, V)
     In a stage-mesh deployment each callable is jitted onto its own submesh
     (launch/serve.py); here they may share one device.
+
+    ``submit`` keeps everything on device: one jitted step runs stage 1 +
+    fused exit decision + compaction, the hard slab is enqueued into the
+    device ring, and full buckets are dispatched to stage 2 asynchronously.
+    Results (easy exit logits, per-bucket stage-2 logits) stay device-side
+    as futures until ``flush`` collects them — one transfer per batch /
+    bucket, ``block_until_ready`` only at flush.
     """
+
+    def __init__(self, stage1_fn: Callable, stage2_fn: Callable,
+                 sc: ServeConfig):
+        self.stage1 = stage1_fn
+        self.stage2 = stage2_fn
+        self.sc = sc
+        self.size = sc.queue_depth * sc.capacity
+        self.stats = ServeStats()
+        self._buf: Optional[dict] = None
+        self._count = 0                       # host mirror of buf['count']
+        # pending device futures, collected at flush()
+        self._easy: List[Tuple[np.ndarray, jnp.ndarray, jnp.ndarray]] = []
+        self._buckets: List[Tuple[jnp.ndarray, jnp.ndarray]] = []
+
+    # -- internal ------------------------------------------------------------
+
+    @staticmethod
+    def _collect_easy(entry, results: dict) -> None:
+        sids, exit_mask, exit_logits = entry
+        mask = np.asarray(exit_mask)
+        logits = np.asarray(exit_logits)
+        for i in np.nonzero(mask)[0]:
+            results[int(sids[i])] = logits[i]
+
+    @staticmethod
+    def _collect_bucket(entry, results: dict) -> None:
+        bucket_ids, logits = entry
+        ids = np.asarray(bucket_ids)
+        logits = np.asarray(logits)
+        for i in np.nonzero(ids >= 0)[0]:
+            results[int(ids[i])] = logits[i]
+
+    def _harvest_oldest(self, results: dict) -> None:
+        """Collect the oldest pending result groups until the backlog fits
+        ``max_pending``. The oldest futures were dispatched many batches
+        ago, so this rarely blocks — it just keeps device-side result
+        memory O(max_pending * B * V) instead of O(total requests)."""
+        while len(self._easy) + len(self._buckets) > self.sc.max_pending:
+            if self._easy:
+                self._collect_easy(self._easy.pop(0), results)
+            else:
+                self._collect_bucket(self._buckets.pop(0), results)
+
+    def _drain(self) -> None:
+        """Pop one bucket from the ring and dispatch stage 2 (async)."""
+        take = min(self._count, self.sc.capacity)
+        if take == 0:
+            return
+        self._buf, bucket, bucket_ids = ring_drain(self._buf,
+                                                   self.sc.capacity)
+        logits = self.stage2(bucket)
+        self._buckets.append((bucket_ids, logits))
+        self._count -= take
+        self.stats.n_stage2 += take
+        self.stats.record_bucket(take / self.sc.capacity)
+
+    # -- public --------------------------------------------------------------
+
+    def submit(self, tokens: np.ndarray, sample_ids: np.ndarray,
+               results: dict):
+        """Serve one stage-1 batch. Easy samples' exit logits and hard
+        samples' hidden rows never leave the device; full buckets drain
+        asynchronously whenever available. If the ring cannot absorb the
+        batch's hard samples, stage 1 stalls (backpressure) and full buckets
+        drain first — partial buckets only when no full one exists.
+
+        ``results`` is filled lazily: entries appear when pending futures
+        are harvested (backlog > ``max_pending``) and at ``flush()`` —
+        unlike HostLoopServer, a sample's logits are NOT guaranteed to be
+        present right after the submit that resolved it."""
+        tokens = jnp.asarray(tokens)
+        ids_dev = jnp.asarray(np.asarray(sample_ids, np.int32))
+        hidden, exit_logits = self.stage1(tokens)
+        slab, slab_ids, n_hard_dev, exit_mask = _decide_compact(
+            hidden, exit_logits, ids_dev, self.sc.c_thr,
+            backend=dispatch.kernel_backend())
+        n_hard = int(n_hard_dev)              # the one host sync per batch
+        b = int(tokens.shape[0])
+        self.stats.n_samples += b
+        self.stats.n_exited += b - n_hard
+        self._easy.append((np.asarray(sample_ids), exit_mask, exit_logits))
+        if n_hard > 0:
+            if self._buf is None:
+                self._buf = ring_init(self.size, slab.shape[1:], slab.dtype)
+            # enqueue in chunks, stalling (draining) whenever the ring is
+            # out of space — so a batch hairier than the whole ring still
+            # serves, it just backpressures stage 1 harder (Fig. 7 story)
+            off = 0
+            while off < n_hard:
+                free = self.size - self._count
+                if free == 0:
+                    self.stats.n_stalls += 1
+                    self._drain()             # full buckets first by
+                    continue                  # construction (count==size)
+                take = min(free, n_hard - off)
+                self._buf = _ring_enqueue_range(self._buf, slab, slab_ids,
+                                                off, off + take)
+                self._count += take
+                off += take
+        while self._count >= self.sc.capacity:
+            self._drain()
+        self._harvest_oldest(results)
+
+    def flush(self, results: dict):
+        """Drain the ring (partial final bucket included) and collect every
+        pending device future into ``results`` — the only point that
+        deliberately blocks on the device."""
+        while self._count > 0:
+            self._drain()
+        pending = ([x for t in self._easy for x in t[1:]]
+                   + [x for t in self._buckets for x in t])
+        if pending:
+            jax.block_until_ready(pending)
+        for entry in self._easy:
+            self._collect_easy(entry, results)
+        for entry in self._buckets:
+            self._collect_bucket(entry, results)
+        self._easy.clear()
+        self._buckets.clear()
+
+
+# ---------------------------------------------------------------------------
+# the seed's host-loop server — kept verbatim as the benchmark baseline
+# (benchmarks/serve_pipeline.py measures the device-resident speedup
+# against it) and as the e2e parity oracle in tests
+# ---------------------------------------------------------------------------
+
+class HostLoopServer:
+    """Per-sample host-loop EE server (pre-device-resident implementation):
+    syncs each hard hidden row to host, queues it in a Python deque and
+    re-stacks it per bucket. Same interface as TwoStageServer."""
 
     def __init__(self, stage1_fn: Callable, stage2_fn: Callable,
                  sc: ServeConfig):
@@ -89,7 +365,7 @@ class TwoStageServer:
         for i, sid in enumerate(ids):
             results[sid] = np.asarray(logits[i])
         self.stats.n_stage2 += take
-        self.stats.bucket_fill.append(take / self.sc.capacity)
+        self.stats.record_bucket(take / self.sc.capacity)
 
     def submit(self, tokens: np.ndarray, sample_ids: np.ndarray,
                results: dict):
@@ -118,10 +394,7 @@ class TwoStageServer:
             self._drain_bucket(results)
 
 
-def build_server(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
-                 sc: ServeConfig) -> TwoStageServer:
-    """Single-host server over the EE model (examples + tests)."""
-
+def _stage_fns(params, cfg: ArchConfig, spec: ee.EarlyExitSpec):
     @jax.jit
     def s1(tokens):
         h, _, logits, _ = ee.stage1_prefill(params, cfg, spec, tokens)
@@ -132,11 +405,24 @@ def build_server(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
         logits, _ = ee.stage2_prefill(params, cfg, spec, slab)
         return logits
 
+    return s1, s2
+
+
+def build_server(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
+                 sc: ServeConfig) -> TwoStageServer:
+    """Single-host device-resident server over the EE model."""
+    s1, s2 = _stage_fns(params, cfg, spec)
     return TwoStageServer(s1, s2, sc)
 
 
-def serve_dataset(server: TwoStageServer, tokens: np.ndarray,
-                  batch: int) -> dict:
+def build_host_server(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
+                      sc: ServeConfig) -> HostLoopServer:
+    """The legacy host-loop server (benchmark baseline / parity oracle)."""
+    s1, s2 = _stage_fns(params, cfg, spec)
+    return HostLoopServer(s1, s2, sc)
+
+
+def serve_dataset(server, tokens: np.ndarray, batch: int) -> dict:
     """Run a whole token set through the server in stage-1 batches.
     Returns {sample_id: logits} plus the stats object."""
     n = tokens.shape[0]

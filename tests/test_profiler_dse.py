@@ -4,6 +4,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep; skip, not error, when absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core import dse, perf_model as pm, profiler as prof
