@@ -2,10 +2,13 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME] [--json]``
 
-``--json`` emits one machine-readable object on stdout — per-bench wall
-seconds, pass/fail, and whatever structured fields the benchmark returned
-besides its table text — so CI can record the perf trajectory over time.
-The human tables go to stderr in that mode.
+``--json`` emits one machine-readable object on stdout — a schema-versioned
+envelope (``schema_version``, the jax backend, a ``fast`` flag) around a
+``benches`` map of per-bench wall seconds, pass/fail, and whatever
+structured fields the benchmark returned besides its table text — so CI
+can record the perf trajectory over time and ``benchmarks/compare.py`` can
+gate regressions against a committed baseline. The human tables go to
+stderr in that mode.
 """
 from __future__ import annotations
 
@@ -14,6 +17,11 @@ import json
 import sys
 import time
 import traceback
+
+# benchmarks/compare.py validates this before diffing; bump it whenever the
+# payload shape changes so a stale baseline fails loudly instead of quietly
+# comparing the wrong fields.
+SCHEMA_VERSION = 1
 
 
 def main(argv=None) -> int:
@@ -25,7 +33,7 @@ def main(argv=None) -> int:
                     help="machine-readable per-bench results on stdout")
     args = ap.parse_args(argv)
 
-    from benchmarks import (fig9_tap, roofline, serve_pipeline,
+    from benchmarks import (fig9_tap, roofline, serve_decode, serve_pipeline,
                             table1_resources, table2_overhead,
                             table3_throughput, table4_networks)
     seeds = 1 if args.fast else 3
@@ -37,6 +45,7 @@ def main(argv=None) -> int:
         ("table4_networks", lambda: table4_networks.run(n_seeds=seeds)),
         ("roofline", roofline.run),
         ("serve_pipeline", lambda: serve_pipeline.run(fast=args.fast)),
+        ("serve_decode", lambda: serve_decode.run(fast=args.fast)),
     ]
     if args.only and args.only not in {n for n, _ in benches}:
         ap.error(f"unknown benchmark {args.only!r}; "
@@ -62,7 +71,12 @@ def main(argv=None) -> int:
             print(f"[{name}: FAILED]", file=text_out, flush=True)
             traceback.print_exc()
     if args.json:
-        print(json.dumps(report, indent=1, default=float))
+        import jax
+        payload = {"schema_version": SCHEMA_VERSION,
+                   "backend": jax.default_backend(),
+                   "fast": bool(args.fast),
+                   "benches": report}
+        print(json.dumps(payload, indent=1, default=float))
     return 1 if failures else 0
 
 

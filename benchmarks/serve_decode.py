@@ -1,0 +1,114 @@
+"""Decode-time serving throughput: host-loop vs device-resident DecodeServer.
+
+Measures decode tokens/sec (B x decode-steps per wall second) of the
+per-token host-loop baseline (``runtime.serve_loop.HostLoopDecoder``:
+per-step exit-mask sync, Python walk over hard tokens, per-sample bucket
+re-stacking of hidden rows AND stage-2 KV-cache rows, per-sample cache
+scatter-back) against the device-resident ``DecodeServer`` (fused exit
+decision + compaction through ``kernels.dispatch``, hidden + cache-segment
+rows through the pytree ring, bucketed async stage-2 dispatch, on-device
+cache scatter) across per-token hard rates q ∈ {0.1, 0.3, 0.5}. C_thr is
+calibrated per q on the first decode step's exit-head confidences, and the
+stage-2 bucket is sized at ceil(q·B) — the paper's matched p=q operating
+point applied per token.
+
+Both servers share the same jitted stage callables (one ``DecodeFns``), so
+the delta is purely the exit machinery, and merged per-token logits are
+verified bitwise identical before timing. Run via
+``PYTHONPATH=src python -m benchmarks.run --only serve_decode [--json]``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import table
+from repro.core import early_exit as ee
+from repro.models.config import ArchConfig
+from repro.runtime import serve_loop as SL
+
+Q_GRID = (0.1, 0.3, 0.5)
+
+
+def _bench_cfg() -> ArchConfig:
+    """Small enough that the per-token exit machinery (the thing under
+    test) is a visible share of the step period on CPU; the model compute
+    itself is identical between the two servers."""
+    return ArchConfig(
+        name="serve-decode-bench", family="dense", n_layers=4, d_model=32,
+        n_heads=4, n_kv_heads=2, d_ff=64, vocab=256,
+        dtype="float32", param_dtype="float32", tie_embeddings=True,
+    )
+
+
+def _time_decode(make_server, prompt, n_tokens: int, iters: int) -> tuple:
+    """Best-of-iters wall time over one generate stream (fresh server per
+    iteration; the jitted stage fns are shared, so no recompilation)."""
+    make_server().generate(prompt[:2], max(2, n_tokens // 2))  # warmup
+    best, stats = float("inf"), None
+    for _ in range(iters):
+        server = make_server()
+        t0 = time.perf_counter()
+        out = server.generate(prompt, n_tokens)
+        best = min(best, time.perf_counter() - t0)
+        stats = server.stats
+        assert out["tokens"].shape == (prompt.shape[0], n_tokens)
+    tps = prompt.shape[0] * (n_tokens - 1) / best      # decode steps / s
+    return tps, stats
+
+
+def run(fast: bool = False) -> dict:
+    batch, seq = 64, 8
+    n_tokens = 8 if fast else 16
+    iters = 2 if fast else 3
+    cfg = _bench_cfg()
+    spec0 = ee.EarlyExitSpec(exit_layer=2, c_thr=0.5)
+    params = ee.init_ee_params(jax.random.PRNGKey(0), cfg, spec0)
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(1),
+                                           (batch, seq), 0, cfg.vocab))
+    conf = SL.decode_step0_confidences(params, cfg, spec0, prompt,
+                                       max_len=seq + n_tokens)
+    fns = SL.decode_stage_fns(params, cfg, spec0)  # c_thr never baked in
+
+    rows, data = [], {}
+    for q in Q_GRID:
+        # C_thr at the q-quantile of confidence => a q token fraction hard
+        c_thr = float(jnp.quantile(conf, q))
+        capacity = max(4, int(np.ceil(q * batch)))
+        sc = SL.ServeConfig(capacity=capacity, queue_depth=4, c_thr=c_thr)
+
+        # bitwise parity gate before timing: same logits, same tokens
+        od = SL.DecodeServer(fns, sc).generate(prompt, max(3, n_tokens // 4))
+        oh = SL.HostLoopDecoder(fns, sc).generate(prompt,
+                                                  max(3, n_tokens // 4))
+        parity = (np.array_equal(od["logits"], oh["logits"])
+                  and np.array_equal(od["tokens"], oh["tokens"]))
+        assert parity, f"decode parity broke at q={q}"
+
+        host_tps, host_stats = _time_decode(
+            lambda: SL.HostLoopDecoder(fns, sc), prompt, n_tokens, iters)
+        dev_tps, dev_stats = _time_decode(
+            lambda: SL.DecodeServer(fns, sc), prompt, n_tokens, iters)
+        speedup = dev_tps / host_tps
+        rows.append([f"{q:.1f}", f"{dev_stats.realized_q:.2f}", capacity,
+                     f"{host_tps:,.0f}", f"{dev_tps:,.0f}",
+                     f"{speedup:.2f}x",
+                     f"{dev_stats.mean_bucket_fill:.2f}", parity])
+        data[f"q{q}"] = {"host_tps": host_tps, "device_tps": dev_tps,
+                         "speedup": speedup, "parity": bool(parity),
+                         "realized_q": dev_stats.realized_q}
+
+    txt = table(
+        "Decode serving: host-loop vs device-resident "
+        f"(B={batch}, prompt={seq}, T={n_tokens}, "
+        f"backend={jax.default_backend()})",
+        ["q", "realized q", "bucket C", "host tok/s", "device tok/s",
+         "speedup", "bucket fill", "bitwise"], rows)
+    return {"text": txt, **data}
+
+
+if __name__ == "__main__":
+    print(run()["text"])

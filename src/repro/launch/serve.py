@@ -1,11 +1,16 @@
 """Serving driver: ``PYTHONPATH=src python -m repro.launch.serve
---arch qwen2-1.5b --smoke --requests 256``.
+--arch qwen2-1.5b --smoke --requests 256 [--mode decode]``.
 
-Builds the device-resident two-stage EE server (stage 1 full rate, stage 2
-bucketed at capacity = ceil((p+slack)·B), hard samples carried between
-batches in the device ring buffer), pushes batched requests with a
-controlled hard-fraction q, and reports throughput + stage-2 occupancy —
-the runtime half of the ATHEENA pipeline."""
+``--mode prefill`` (default) builds the device-resident two-stage EE
+server (stage 1 full rate, stage 2 bucketed at capacity = ceil((p+slack)·B),
+hard samples carried between batches in the device ring buffer) and pushes
+batched requests with a controlled hard-fraction q.
+
+``--mode decode`` builds the decode-time ``DecodeServer``: full-depth
+prefill of the prompts, then per-token two-stage decode where hard tokens'
+hidden rows + stage-2 KV-cache segment rows travel the pytree ring into
+bucketed stage-2 dispatches. Reports decode tokens/s + per-token stats —
+the runtime half of the ATHEENA pipeline in both regimes."""
 from __future__ import annotations
 
 import argparse
@@ -25,9 +30,14 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b", choices=list_archs())
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mode", default="prefill",
+                    choices=("prefill", "decode"))
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--batch", type=int, default=32)
-    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--seq", type=int, default=64,
+                    help="request length (prompt length in decode mode)")
+    ap.add_argument("--decode-tokens", type=int, default=32,
+                    help="tokens to generate per request (decode mode)")
     ap.add_argument("--p", type=float, default=0.25,
                     help="design-time hard probability (sizes stage 2)")
     ap.add_argument("--c-thr", type=float, default=0.9)
@@ -37,9 +47,24 @@ def main(argv=None) -> int:
     spec = ee.default_spec(cfg, c_thr=args.c_thr)
     params = ee.init_ee_params(jax.random.PRNGKey(0), cfg, spec)
     cap = stage2_capacity(args.batch, args.p)
-    server = SL.build_server(params, cfg, spec,
-                             SL.ServeConfig(capacity=cap, c_thr=args.c_thr))
+    sc = SL.ServeConfig(capacity=cap, c_thr=args.c_thr)
 
+    if args.mode == "decode":
+        server = SL.build_decode_server(params, cfg, spec, sc)
+        prompts = np.asarray(jax.random.randint(
+            jax.random.PRNGKey(1), (args.batch, args.seq), 0, cfg.vocab))
+        t0 = time.perf_counter()
+        out = server.generate(prompts, args.decode_tokens)
+        dt = time.perf_counter() - t0
+        assert out["tokens"].shape == (args.batch, args.decode_tokens)
+        n_decode = args.batch * (args.decode_tokens - 1)
+        print(json.dumps({"arch": args.arch, "mode": "decode",
+                          "capacity": cap,
+                          "decode_tokens_per_s": n_decode / dt,
+                          **server.stats.as_dict()}, indent=1))
+        return 0
+
+    server = SL.build_server(params, cfg, spec, sc)
     toks = np.asarray(jax.random.randint(
         jax.random.PRNGKey(1), (args.requests, args.seq), 0, cfg.vocab))
     t0 = time.perf_counter()
@@ -47,7 +72,7 @@ def main(argv=None) -> int:
     dt = time.perf_counter() - t0
     assert len(results) == args.requests
     stats = server.stats.as_dict()
-    print(json.dumps({"arch": args.arch, "capacity": cap,
+    print(json.dumps({"arch": args.arch, "mode": "prefill", "capacity": cap,
                       "throughput_samples_per_s": args.requests / dt,
                       **stats}, indent=1))
     return 0

@@ -1,5 +1,5 @@
 """Two-stage Early-Exit serving runtime (the paper's Fig. 3 pipeline),
-device-resident.
+device-resident, for both prefill and autoregressive decode.
 
 Stage 1 (full batch) -> Exit Decision -> Conditional Buffer (compaction into
 fixed-capacity hard-sample buckets) -> Stage 2 (buckets only) -> Exit Merge
@@ -13,7 +13,7 @@ and yields the Fig. 4 q-vs-p robustness behaviour:
 
 **Device residency.** ATHEENA's throughput comes from keeping the exit
 machinery on-chip: the FPGA conditional buffer never round-trips a feature
-map through host memory. ``TwoStageServer`` mirrors that:
+map through host memory. The servers here mirror that:
 
   * the exit decision + compaction run as ONE jitted step per stage-1 batch
     through the kernel dispatch layer (``kernels.dispatch``): the fused
@@ -21,18 +21,34 @@ map through host memory. ``TwoStageServer`` mirrors that:
     materialized softmax — and ``gather_compact_op`` emits the hard-sample
     slab without leaving the device;
   * hard samples carry over between stage-1 batches in a preallocated
-    **device-side ring buffer** — a ``(queue_depth * capacity, S, d)`` slab
-    plus int32 head/count cursors — updated in place by jitted
+    **device-side ring buffer** over an arbitrary **pytree payload**: every
+    leaf is a ``(size, *row)`` slab sharing one set of int32 head/count
+    cursors and one Sample-ID lane, updated in place by jitted
     ``ring_enqueue`` / ``ring_drain`` steps with ``donate_argnums`` so no
-    copy of the queue ever exists. The old implementation (kept below as
-    ``HostLoopServer``, the benchmark baseline) instead synced each hidden
-    row to host, held it in a Python ``deque`` and re-stacked it per bucket;
+    copy of the queue ever exists. Prefill rings carry the bare hidden slab;
+    decode rings carry ``{hidden row, stage-2 KV-cache segment row}``. The
+    pre-device-resident implementation (kept below as ``HostLoopServer``,
+    the benchmark baseline) instead synced each hidden row to host, held it
+    in a Python ``deque`` and re-stacked it per bucket;
   * drains are asynchronous: stage 2 is dispatched on a bucket and only the
     (ids, logits) futures are retained; nothing calls
     ``block_until_ready``/``np.asarray`` until ``flush()``, so results leave
     the device in one per-bucket transfer and stage 2 overlaps with
     subsequent stage-1 batches. The single host sync per batch is the scalar
     ``n_hard`` needed for backpressure control flow.
+
+**Decode serving (``DecodeServer``).** Autoregressive decode makes the exit
+decision *per token*: every decode step runs ``ee.stage1_decode`` on the
+full token batch, and only the hard tokens' hidden rows — together with
+those samples' stage-2 KV-cache segment rows (``ee.split_caches``) — travel
+through the ring into bucketed ``ee.stage2_decode`` dispatches. Updated
+bucket cache rows are scattered back into the sample-major stage-2 cache
+store on device. Decode is step-synchronous (token t+1 of a sample needs
+its token-t logits), so the ring drains fully at the end of each step; its
+job is device-side bucketing + backpressure within the step. A token that
+exits early skips stage 2 entirely, so its stage-2 cache keeps zeros at
+that position — the *exit-gap* semantics shared bitwise with the host-loop
+baseline (cf. the cache-handling challenges in Laskaridis et al. 2021).
 
 **Ring sizing / deadlock avoidance (paper Fig. 7).** The ring holds
 ``queue_depth * capacity`` samples. A stage-1 batch whose hard count exceeds
@@ -42,17 +58,20 @@ and are used only when no full bucket exists. Any batch size is therefore
 correct even against a tiny ring (no deadlock, no drop); an undersized ring
 just stalls stage 1 harder — the paper's Fig. 7 minimum-depth sizing is a
 throughput constraint, surfaced by ``ServeStats.n_stalls``, not a
-correctness one.
+correctness one. For decode rings each row additionally carries the sample's
+stage-2 cache segment, so ring bytes scale with ``max_len`` — size
+``queue_depth`` down accordingly.
 
-The runtime tracks realized q and reports occupancy/stall statistics so a
-deployment can re-plan (``core.stage_mesh``) when drift is persistent.
+The runtime tracks realized q *per decision* (= per sample for prefill, per
+token for decode) and reports occupancy/stall statistics so a deployment can
+re-plan (``core.stage_mesh``) when drift is persistent.
 """
 from __future__ import annotations
 
 import functools
 from collections import deque
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
@@ -62,6 +81,7 @@ import jax.numpy as jnp
 from repro.core import early_exit as ee
 from repro.core import exit_decision as ed
 from repro.kernels import dispatch
+from repro.models import transformer as T
 from repro.models.config import ArchConfig
 
 
@@ -78,12 +98,22 @@ class ServeConfig:
 
 @dataclass
 class ServeStats:
+    """Serving counters. ``n_samples`` counts distinct samples admitted;
+    ``n_decisions`` counts exit decisions — equal for prefill (one decision
+    per sample), ``n_samples * generated_tokens`` for decode. ``realized_q``
+    is therefore per-decision, which is the quantity the stage-2 bucket is
+    provisioned against in both regimes."""
     n_samples: int = 0
+    n_decisions: int = 0
     n_exited: int = 0
     n_stage2: int = 0
     n_stalls: int = 0
     n_buckets: int = 0              # running aggregate, O(1) memory
     bucket_fill_sum: float = 0.0
+
+    def record_decisions(self, n: int, n_hard: int) -> None:
+        self.n_decisions += n
+        self.n_exited += n - n_hard
 
     def record_bucket(self, fill: float) -> None:
         self.n_buckets += 1
@@ -95,25 +125,38 @@ class ServeStats:
 
     @property
     def realized_q(self) -> float:
-        return self.n_stage2 / max(self.n_samples, 1)
+        return self.n_stage2 / max(self.n_decisions, 1)
+
+    @property
+    def decisions_per_sample(self) -> float:
+        return self.n_decisions / max(self.n_samples, 1)
 
     def as_dict(self):
-        return {"n_samples": self.n_samples, "n_exited": self.n_exited,
-                "n_stage2": self.n_stage2, "n_stalls": self.n_stalls,
-                "realized_q": self.realized_q,
+        return {"n_samples": self.n_samples, "n_decisions": self.n_decisions,
+                "n_exited": self.n_exited, "n_stage2": self.n_stage2,
+                "n_stalls": self.n_stalls, "realized_q": self.realized_q,
+                "decisions_per_sample": self.decisions_per_sample,
                 "mean_bucket_fill": self.mean_bucket_fill}
 
 
 # ---------------------------------------------------------------------------
-# device-side ring buffer: preallocated slab + int32 cursors, updated in
-# place (donated) by jitted steps
+# device-side ring buffer over a pytree payload: per-leaf (size, *row) slabs
+# sharing one id lane + int32 cursors, updated in place (donated) by jitted
+# steps
 # ---------------------------------------------------------------------------
 
-def ring_init(size: int, row_shape: Tuple[int, ...], dtype) -> dict:
-    """Allocate the ring: {'hidden' (size, *row), 'ids' (size,), 'head' (),
+def ring_init(size: int, row, dtype=None) -> dict:
+    """Allocate the ring. ``row`` is either a bare shape tuple with ``dtype``
+    (single-slab convenience, payload = one array) or a pytree whose leaves
+    carry ``.shape``/``.dtype`` per-row (arrays or ShapeDtypeStructs).
+    Returns {'data' pytree of (size, *row_leaf), 'ids' (size,), 'head' (),
     'count' ()} — ids slots are -1 (the paper's unused Sample ID)."""
+    if dtype is not None:
+        row = jax.ShapeDtypeStruct(tuple(row), dtype)
+    data = jax.tree.map(
+        lambda r: jnp.zeros((size,) + tuple(r.shape), r.dtype), row)
     return {
-        "hidden": jnp.zeros((size,) + tuple(row_shape), dtype),
+        "data": data,
         "ids": jnp.full((size,), -1, jnp.int32),
         "head": jnp.zeros((), jnp.int32),
         "count": jnp.zeros((), jnp.int32),
@@ -123,7 +166,8 @@ def ring_init(size: int, row_shape: Tuple[int, ...], dtype) -> dict:
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _ring_enqueue_range(buf: dict, slab, slab_ids, lo, hi) -> dict:
     """Append slab rows [lo, min(hi, n_valid)) at the ring's tail, where
-    n_valid is the compacted slab's valid prefix (ids >= 0). The donated
+    n_valid is the compacted slab's valid prefix (ids >= 0). ``slab`` is a
+    pytree matching buf['data'] rows (every leaf (n, *row_leaf)). The donated
     buffer is updated in place; unselected rows scatter out of bounds and
     are dropped. The caller guarantees the selected range fits."""
     size = buf["ids"].shape[0]
@@ -135,36 +179,36 @@ def _ring_enqueue_range(buf: dict, slab, slab_ids, lo, hi) -> dict:
     idx = (buf["head"] + buf["count"] + lanes - lo) % size
     idx = jnp.where(sel, idx, size)                  # OOB -> dropped
     return {
-        "hidden": buf["hidden"].at[idx].set(slab, mode="drop"),
+        "data": jax.tree.map(lambda d, s: d.at[idx].set(s, mode="drop"),
+                             buf["data"], slab),
         "ids": buf["ids"].at[idx].set(slab_ids, mode="drop"),
         "head": buf["head"],
         "count": buf["count"] + jnp.maximum(upper - lo, 0),
     }
 
 
-def ring_enqueue(buf: dict, slab: jnp.ndarray, slab_ids: jnp.ndarray) -> dict:
-    """Append the whole valid prefix of a compacted slab (ids >= 0) at the
-    ring's tail; see ``_ring_enqueue_range``."""
+def ring_enqueue(buf: dict, slab, slab_ids: jnp.ndarray) -> dict:
+    """Append the whole valid prefix of a compacted slab pytree (ids >= 0)
+    at the ring's tail; see ``_ring_enqueue_range``."""
     return _ring_enqueue_range(buf, slab, slab_ids, 0, slab_ids.shape[0])
 
 
 @functools.partial(jax.jit, donate_argnums=(0,), static_argnames=("capacity",))
-def ring_drain(buf: dict, capacity: int
-               ) -> Tuple[dict, jnp.ndarray, jnp.ndarray]:
+def ring_drain(buf: dict, capacity: int):
     """Pop up to ``capacity`` samples from the ring's head into a stage-2
-    bucket. Returns (buf, bucket (capacity, *row), bucket_ids (capacity,))
-    — slots past the take carry id -1 (flush) and whatever stale rows the
-    ring holds (stage 2 is row-independent, flush rows are discarded by the
-    exit merge)."""
+    bucket. Returns (buf, bucket pytree of (capacity, *row_leaf),
+    bucket_ids (capacity,)) — slots past the take carry id -1 (flush) and
+    whatever stale rows the ring holds (stage 2 is row-independent, flush
+    rows are discarded by the exit merge)."""
     size = buf["ids"].shape[0]
     take_n = jnp.minimum(buf["count"], capacity).astype(jnp.int32)
     lanes = jnp.arange(capacity, dtype=jnp.int32)
     idx = (buf["head"] + lanes) % size
     valid = lanes < take_n
-    bucket = jnp.take(buf["hidden"], idx, axis=0)
+    bucket = jax.tree.map(lambda d: jnp.take(d, idx, axis=0), buf["data"])
     bucket_ids = jnp.where(valid, jnp.take(buf["ids"], idx), -1)
     new = {
-        "hidden": buf["hidden"],
+        "data": buf["data"],
         "ids": buf["ids"].at[jnp.where(valid, idx, size)].set(
             -1, mode="drop"),
         "head": (buf["head"] + take_n) % size,
@@ -192,10 +236,64 @@ def _decide_compact(hidden, exit_logits, sample_ids, c_thr, *, backend):
 
 
 # ---------------------------------------------------------------------------
-# device-resident two-stage server
+# shared ring plumbing: chunked enqueue under backpressure + bucket pops —
+# the one ring implementation both the prefill and the decode server sit on
 # ---------------------------------------------------------------------------
 
-class TwoStageServer:
+class _RingedServer:
+    def __init__(self, sc: ServeConfig):
+        self.sc = sc
+        self.size = sc.queue_depth * sc.capacity
+        self.stats = ServeStats()
+        self._buf: Optional[dict] = None
+        self._count = 0                   # host mirror of buf['count']
+
+    def _drain(self) -> None:             # pop one bucket + dispatch stage 2
+        raise NotImplementedError
+
+    def _enqueue_backpressured(self, slab_tree, slab_ids, n_hard: int) -> None:
+        """Enqueue ``n_hard`` valid rows of a compacted slab pytree in
+        chunks, stalling (draining) whenever the ring is out of space — so
+        a batch hairier than the whole ring still serves, it just
+        backpressures stage 1 harder (Fig. 7 story). Full buckets drain
+        first by construction (count == size when stalled)."""
+        if self._buf is None:
+            spec = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                slab_tree)
+            self._buf = ring_init(self.size, spec)
+        off = 0
+        while off < n_hard:
+            free = self.size - self._count
+            if free == 0:
+                self.stats.n_stalls += 1
+                self._drain()
+                continue
+            take = min(free, n_hard - off)
+            self._buf = _ring_enqueue_range(self._buf, slab_tree, slab_ids,
+                                            off, off + take)
+            self._count += take
+            off += take
+
+    def _pop_bucket(self):
+        """Pop up to ``capacity`` rows; returns (bucket pytree, ids) or
+        None when the ring is empty. Updates occupancy stats."""
+        take = min(self._count, self.sc.capacity)
+        if take == 0:
+            return None
+        self._buf, bucket, bucket_ids = ring_drain(self._buf,
+                                                   self.sc.capacity)
+        self._count -= take
+        self.stats.n_stage2 += take
+        self.stats.record_bucket(take / self.sc.capacity)
+        return bucket, bucket_ids
+
+
+# ---------------------------------------------------------------------------
+# device-resident two-stage prefill server
+# ---------------------------------------------------------------------------
+
+class TwoStageServer(_RingedServer):
     """Batch-level EE server over jitted stage callables, device-resident.
 
     stage1_fn: tokens (B, S) -> (hidden, exit_logits)
@@ -213,13 +311,9 @@ class TwoStageServer:
 
     def __init__(self, stage1_fn: Callable, stage2_fn: Callable,
                  sc: ServeConfig):
+        super().__init__(sc)
         self.stage1 = stage1_fn
         self.stage2 = stage2_fn
-        self.sc = sc
-        self.size = sc.queue_depth * sc.capacity
-        self.stats = ServeStats()
-        self._buf: Optional[dict] = None
-        self._count = 0                       # host mirror of buf['count']
         # pending device futures, collected at flush()
         self._easy: List[Tuple[np.ndarray, jnp.ndarray, jnp.ndarray]] = []
         self._buckets: List[Tuple[jnp.ndarray, jnp.ndarray]] = []
@@ -255,16 +349,12 @@ class TwoStageServer:
 
     def _drain(self) -> None:
         """Pop one bucket from the ring and dispatch stage 2 (async)."""
-        take = min(self._count, self.sc.capacity)
-        if take == 0:
+        popped = self._pop_bucket()
+        if popped is None:
             return
-        self._buf, bucket, bucket_ids = ring_drain(self._buf,
-                                                   self.sc.capacity)
+        bucket, bucket_ids = popped
         logits = self.stage2(bucket)
         self._buckets.append((bucket_ids, logits))
-        self._count -= take
-        self.stats.n_stage2 += take
-        self.stats.record_bucket(take / self.sc.capacity)
 
     # -- public --------------------------------------------------------------
 
@@ -289,26 +379,10 @@ class TwoStageServer:
         n_hard = int(n_hard_dev)              # the one host sync per batch
         b = int(tokens.shape[0])
         self.stats.n_samples += b
-        self.stats.n_exited += b - n_hard
+        self.stats.record_decisions(b, n_hard)
         self._easy.append((np.asarray(sample_ids), exit_mask, exit_logits))
         if n_hard > 0:
-            if self._buf is None:
-                self._buf = ring_init(self.size, slab.shape[1:], slab.dtype)
-            # enqueue in chunks, stalling (draining) whenever the ring is
-            # out of space — so a batch hairier than the whole ring still
-            # serves, it just backpressures stage 1 harder (Fig. 7 story)
-            off = 0
-            while off < n_hard:
-                free = self.size - self._count
-                if free == 0:
-                    self.stats.n_stalls += 1
-                    self._drain()             # full buckets first by
-                    continue                  # construction (count==size)
-                take = min(free, n_hard - off)
-                self._buf = _ring_enqueue_range(self._buf, slab, slab_ids,
-                                                off, off + take)
-                self._count += take
-                off += take
+            self._enqueue_backpressured(slab, slab_ids, n_hard)
         while self._count >= self.sc.capacity:
             self._drain()
         self._harvest_oldest(results)
@@ -377,6 +451,7 @@ class HostLoopServer:
             exit_logits, self.sc.c_thr)
         exit_mask = np.asarray(exit_mask)
         self.stats.n_samples += len(sample_ids)
+        self.stats.n_decisions += len(sample_ids)
         for i, sid in enumerate(sample_ids):
             if exit_mask[i]:
                 results[sid] = np.asarray(exit_logits[i])
@@ -393,6 +468,276 @@ class HostLoopServer:
         while self.queue:
             self._drain_bucket(results)
 
+
+# ---------------------------------------------------------------------------
+# decode-time serving: per-token exit decisions with stage-2 KV-cache
+# segments carried through the pytree ring
+# ---------------------------------------------------------------------------
+
+def cache_rows_of(seg: dict) -> dict:
+    """Re-layout a segment cache pytree (run_layers layout) so every leaf is
+    sample-major (batch axis 0): 'blocks' leaves carry a leading superblock
+    axis (n_sb, B, ...) -> (B, n_sb, ...); 'first'/'rem' leaves are already
+    batch-leading. The result is a valid pytree-ring payload (rows = axis
+    0 of every leaf)."""
+    return {"first": seg["first"],
+            "blocks": jax.tree.map(lambda x: jnp.moveaxis(x, 1, 0),
+                                   seg["blocks"]),
+            "rem": seg["rem"]}
+
+
+def cache_of_rows(rows: dict) -> dict:
+    """Inverse of ``cache_rows_of``: back to the run_layers layout."""
+    return {"first": rows["first"],
+            "blocks": jax.tree.map(lambda x: jnp.moveaxis(x, 0, 1),
+                                   rows["blocks"]),
+            "rem": rows["rem"]}
+
+
+@jax.jit
+def _gather_rows(rows, ids):
+    """Gather sample-major rows by compacted slab ids (-1 flush slots read
+    row 0; their content is never used — flush ids drop on enqueue)."""
+    take = jnp.maximum(ids, 0)
+    return jax.tree.map(lambda m: jnp.take(m, take, axis=0), rows)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_rows(rows, bucket_rows, ids):
+    """Scatter updated bucket cache rows back into the sample-major store;
+    flush ids (-1) scatter out of bounds and are dropped. Donated: the
+    store is updated in place."""
+    b = jax.tree.leaves(rows)[0].shape[0]
+    safe = jnp.where(ids >= 0, ids, b)
+    return jax.tree.map(lambda m, r: m.at[safe].set(r, mode="drop"),
+                        rows, bucket_rows)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _merge_bucket_logits(merged, ids, logits):
+    """Exit Merge, one bucket at a time: overwrite hard samples' rows of
+    the per-step logits with their stage-2 results (flush ids dropped)."""
+    safe = jnp.where(ids >= 0, ids, merged.shape[0])
+    return merged.at[safe].set(logits, mode="drop")
+
+
+@jax.jit
+def _greedy_tokens(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+
+
+class DecodeFns(NamedTuple):
+    """Jitted decode-stage callables shared by ``DecodeServer`` and the
+    host-loop baseline, so benchmark deltas are purely the exit machinery
+    and parity is bitwise."""
+    prefill: Callable   # (tokens (B,S), max_len static) -> (logits, caches)
+    split: Callable     # caches -> (stage1_caches, stage2_cache_rows)
+    s1: Callable        # (tok (B,1), c1, step) -> (h (B,d), c1', exit_logits)
+    s2: Callable        # (h (C,d), cache_rows, step) -> (logits, new_rows)
+
+
+def decode_stage_fns(params, cfg: ArchConfig, spec: ee.EarlyExitSpec
+                     ) -> DecodeFns:
+    @functools.partial(jax.jit, static_argnames=("max_len",))
+    def pf(tokens, max_len: int):
+        logits, caches, _ = T.prefill(params["backbone"], cfg, tokens,
+                                      max_len=max_len)
+        return logits, caches
+
+    @jax.jit
+    def split(caches):
+        c1, c2 = ee.split_caches(cfg, spec, caches)
+        return c1, cache_rows_of(c2)
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def s1(tok, c1, step):
+        h, nc1, exit_logits = ee.stage1_decode(params, cfg, spec, tok, c1,
+                                               step)
+        return h[:, 0], nc1, exit_logits
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def s2(h_rows, cache_rows, step):
+        logits, nc = ee.stage2_decode(params, cfg, spec, h_rows[:, None],
+                                      cache_of_rows(cache_rows), step)
+        return logits, cache_rows_of(nc)
+
+    return DecodeFns(pf, split, s1, s2)
+
+
+def decode_step0_confidences(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
+                             prompt, max_len: int) -> jnp.ndarray:
+    """Exit-head max-softmax confidences of the FIRST decode step (greedy
+    token from the prefill logits): the calibration set for per-token
+    thresholds, whose statistics drift from prefill's per-sample
+    confidences. prompt: (B, S) int32; max_len sizes the cache pads."""
+    prompt = jnp.asarray(prompt)
+    S = prompt.shape[1]
+    logits, caches, _ = T.prefill(params["backbone"], cfg, prompt,
+                                  max_len=max_len)
+    c1, _ = ee.split_caches(cfg, spec, caches)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    _, _, exit_logits = ee.stage1_decode(params, cfg, spec, tok, c1,
+                                         jnp.int32(S))
+    return ed.softmax_confidence(exit_logits)
+
+
+class DecodeServer(_RingedServer):
+    """Device-resident decode-time two-stage EE server.
+
+    ``generate`` prefills the full-depth model (populating both cache
+    segments for the prompt), then decodes greedily with a per-token exit
+    decision: each step runs stage 1 on the whole batch, the fused
+    decision/compaction kernels emit the hard-token slab, and the hard
+    tokens' hidden rows + their stage-2 KV-cache segment rows ride the
+    pytree ring into bucketed stage-2 dispatches. Updated cache rows
+    scatter back on device; easy tokens never touch stage 2 (their stage-2
+    cache keeps zeros at that position — exit-gap semantics, identical in
+    the host baseline). The only per-step host sync is the scalar
+    ``n_hard``; merged per-step logits are harvested lazily under
+    ``max_pending``.
+    """
+
+    def __init__(self, fns: DecodeFns, sc: ServeConfig):
+        super().__init__(sc)
+        self.fns = fns
+        self._c1 = None          # stage-1 segment caches (run_layers layout)
+        self._rows = None        # stage-2 segment cache, sample-major rows
+        self._ids = None         # arange(B) device constant
+        self._pos = None         # current absolute position (drains need it)
+        self._step_buckets: List[Tuple[jnp.ndarray, jnp.ndarray]] = []
+
+    # -- internal ------------------------------------------------------------
+
+    def _drain(self) -> None:
+        popped = self._pop_bucket()
+        if popped is None:
+            return
+        bucket, bucket_ids = popped
+        logits, new_rows = self.fns.s2(bucket["h"], bucket["cache"],
+                                       self._pos)
+        self._rows = _scatter_rows(self._rows, new_rows, bucket_ids)
+        self._step_buckets.append((bucket_ids, logits))
+
+    def _step(self, tok, pos: int):
+        """One decode step for the whole batch; returns merged (B, V)
+        logits (device). Ring drains fully — decode is step-synchronous."""
+        h_rows, self._c1, exit_logits = self.fns.s1(tok, self._c1, pos)
+        slab, slab_ids, n_hard_dev, _ = _decide_compact(
+            h_rows, exit_logits, self._ids, self.sc.c_thr,
+            backend=dispatch.kernel_backend())
+        n_hard = int(n_hard_dev)             # the one host sync per step
+        b = h_rows.shape[0]
+        self.stats.record_decisions(b, n_hard)
+        self._pos = pos
+        self._step_buckets = []
+        if n_hard > 0:
+            cache_slab = _gather_rows(self._rows, slab_ids)
+            self._enqueue_backpressured({"h": slab, "cache": cache_slab},
+                                        slab_ids, n_hard)
+        while self._count > 0:               # full buckets, then the partial
+            self._drain()
+        merged = exit_logits
+        for bucket_ids, logits in self._step_buckets:
+            merged = _merge_bucket_logits(merged, bucket_ids, logits)
+        return merged
+
+    # -- public --------------------------------------------------------------
+
+    def generate(self, prompt: np.ndarray, n_tokens: int) -> dict:
+        """Greedy EE generation: prefill the (B, S) prompt, then emit
+        ``n_tokens`` tokens (the first from the prefill logits, the rest
+        from per-token two-stage decode). Returns {'tokens' (B, n_tokens),
+        'logits' (B, n_tokens, V)} as host arrays."""
+        if n_tokens < 1:
+            raise ValueError(f"n_tokens must be >= 1, got {n_tokens}")
+        prompt = jnp.asarray(np.asarray(prompt, np.int32))
+        B, S = prompt.shape
+        self.stats.n_samples += B
+        self._buf, self._count = None, 0     # fresh ring per stream shape
+        self._ids = jnp.arange(B, dtype=jnp.int32)
+        logits0, caches = self.fns.prefill(prompt, S + n_tokens)
+        self._c1, self._rows = self.fns.split(caches)
+        merged = logits0
+        logits_out: List = [None] * n_tokens
+        toks_out: List = []
+        pending: List[Tuple[int, jnp.ndarray]] = []
+        for t in range(n_tokens):
+            tok = _greedy_tokens(merged)
+            toks_out.append(tok)
+            pending.append((t, merged))
+            while len(pending) > self.sc.max_pending:
+                slot, arr = pending.pop(0)
+                logits_out[slot] = np.asarray(arr)
+            if t == n_tokens - 1:
+                break
+            merged = self._step(tok, S + t)
+        for slot, arr in pending:            # flush
+            logits_out[slot] = np.asarray(arr)
+        tokens = np.concatenate([np.asarray(x) for x in toks_out], axis=1)
+        return {"tokens": tokens, "logits": np.stack(logits_out, axis=1)}
+
+
+class HostLoopDecoder:
+    """Per-token host-loop decode baseline (HostLoopServer-style): syncs the
+    exit mask each step, walks the hard tokens in Python, re-stacks each
+    bucket's hidden rows AND cache rows sample by sample, and scatters
+    updated cache rows back one sample at a time. Shares the jitted stage
+    callables with ``DecodeServer``, so merged logits are bitwise identical
+    — the delta is purely the exit machinery."""
+
+    def __init__(self, fns: DecodeFns, sc: ServeConfig):
+        self.fns = fns
+        self.sc = sc
+        self.stats = ServeStats()
+
+    def generate(self, prompt: np.ndarray, n_tokens: int) -> dict:
+        if n_tokens < 1:
+            raise ValueError(f"n_tokens must be >= 1, got {n_tokens}")
+        prompt = jnp.asarray(np.asarray(prompt, np.int32))
+        B, S = prompt.shape
+        self.stats.n_samples += B
+        logits0, caches = self.fns.prefill(prompt, S + n_tokens)
+        c1, rows = self.fns.split(caches)
+        merged = np.asarray(logits0)
+        logits_out, toks_out = [], []
+        C = self.sc.capacity
+        for t in range(n_tokens):
+            tok = np.argmax(merged, axis=-1).astype(np.int32)[:, None]
+            toks_out.append(tok)
+            logits_out.append(merged)
+            if t == n_tokens - 1:
+                break
+            pos = S + t
+            h_rows, c1, exit_logits = self.fns.s1(jnp.asarray(tok), c1, pos)
+            exit_mask, _, _ = ed.decision_and_argmax(exit_logits,
+                                                     self.sc.c_thr)
+            exit_mask = np.asarray(exit_mask)        # per-step host sync
+            merged = np.array(np.asarray(exit_logits))
+            hard = [i for i in range(B) if not exit_mask[i]]
+            self.stats.record_decisions(B, len(hard))
+            for lo in range(0, len(hard), C):
+                chunk = hard[lo:lo + C]
+                pad = C - len(chunk)
+                take = chunk + [chunk[0]] * pad      # flush-padded bucket
+                bucket_h = jnp.stack([h_rows[i] for i in take])
+                bucket_cache = jax.tree.map(
+                    lambda m: jnp.stack([m[i] for i in take]), rows)
+                logits, new_rows = self.fns.s2(bucket_h, bucket_cache, pos)
+                lnp = np.asarray(logits)
+                for j, sid in enumerate(chunk):
+                    merged[sid] = lnp[j]
+                    rows = jax.tree.map(
+                        lambda m, r, j=j, sid=sid: m.at[sid].set(r[j]),
+                        rows, new_rows)
+                self.stats.n_stage2 += len(chunk)
+                self.stats.record_bucket(len(chunk) / C)
+        tokens = np.concatenate(toks_out, axis=1)
+        return {"tokens": tokens, "logits": np.stack(logits_out, axis=1)}
+
+
+# ---------------------------------------------------------------------------
+# builders
+# ---------------------------------------------------------------------------
 
 def _stage_fns(params, cfg: ArchConfig, spec: ee.EarlyExitSpec):
     @jax.jit
@@ -420,6 +765,18 @@ def build_host_server(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
     """The legacy host-loop server (benchmark baseline / parity oracle)."""
     s1, s2 = _stage_fns(params, cfg, spec)
     return HostLoopServer(s1, s2, sc)
+
+
+def build_decode_server(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
+                        sc: ServeConfig) -> DecodeServer:
+    """Single-host device-resident decode server over the EE model."""
+    return DecodeServer(decode_stage_fns(params, cfg, spec), sc)
+
+
+def build_host_decoder(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
+                       sc: ServeConfig) -> HostLoopDecoder:
+    """The host-loop decode baseline (benchmark baseline / parity oracle)."""
+    return HostLoopDecoder(decode_stage_fns(params, cfg, spec), sc)
 
 
 def serve_dataset(server, tokens: np.ndarray, batch: int) -> dict:

@@ -19,13 +19,18 @@ from repro.runtime import serve_loop as SL
 # ---------------------------------------------------------------------------
 
 @pytest.fixture(autouse=True)
-def _clear_backend_env(monkeypatch):
-    """Keep the suite hermetic to a REPRO_KERNEL_BACKEND left in the env
-    (e.g. after a manual interpret-mode validation run)."""
+def _hermetic_backend_env(monkeypatch):
+    """Keep the suite hermetic to a stray REPRO_KERNEL_BACKEND left in the
+    env — EXCEPT the CI interpret job's explicit opt-in, which must reach
+    the dispatch layer so the e2e server tests execute the Pallas kernel
+    bodies rather than the jnp refs."""
+    import os
+    if os.environ.get("REPRO_KERNEL_BACKEND") != "interpret":
+        monkeypatch.delenv("REPRO_KERNEL_BACKEND", raising=False)
+
+
+def test_backend_resolution_off_tpu(monkeypatch):
     monkeypatch.delenv("REPRO_KERNEL_BACKEND", raising=False)
-
-
-def test_backend_resolution_off_tpu():
     assert dispatch.kernel_backend() == "ref"        # auto on CPU
     assert dispatch.kernel_backend("pallas") == "interpret"
     assert dispatch.kernel_backend("ref") == "ref"
@@ -33,7 +38,8 @@ def test_backend_resolution_off_tpu():
         dispatch.kernel_backend("vulkan")
 
 
-def test_set_backend_override():
+def test_set_backend_override(monkeypatch):
+    monkeypatch.delenv("REPRO_KERNEL_BACKEND", raising=False)
     dispatch.set_backend("interpret")
     try:
         assert dispatch.kernel_backend() == "interpret"
@@ -135,6 +141,29 @@ def test_ring_enqueue_drain_basic():
     buf, bucket, ids = SL.ring_drain(buf, 2)          # partial drain
     np.testing.assert_array_equal(np.asarray(ids), [12, -1])
     assert int(buf["count"]) == 0
+
+
+def test_ring_pytree_payload():
+    """The generalized ring carries arbitrary pytrees: every leaf keeps its
+    own (size, *row) slab under the shared cursors/id lane, and enqueue/
+    drain preserve per-leaf row association by sample id."""
+    row = {"h": jax.ShapeDtypeStruct((2,), jnp.float32),
+           "cache": {"k": jax.ShapeDtypeStruct((3, 2), jnp.float32),
+                     "step": jax.ShapeDtypeStruct((), jnp.int32)}}
+    buf = SL.ring_init(4, row)
+    slab = {"h": jnp.arange(6, dtype=jnp.float32).reshape(3, 2),
+            "cache": {"k": jnp.arange(18, dtype=jnp.float32).reshape(3, 3, 2),
+                      "step": jnp.array([7, 8, 9], jnp.int32)}}
+    buf = SL.ring_enqueue(buf, slab, jnp.array([10, 11, 12], jnp.int32))
+    assert int(buf["count"]) == 3
+    buf, bucket, ids = SL.ring_drain(buf, 2)
+    np.testing.assert_array_equal(np.asarray(ids), [10, 11])
+    np.testing.assert_allclose(np.asarray(bucket["h"]),
+                               np.asarray(slab["h"][:2]))
+    np.testing.assert_allclose(np.asarray(bucket["cache"]["k"]),
+                               np.asarray(slab["cache"]["k"][:2]))
+    np.testing.assert_array_equal(np.asarray(bucket["cache"]["step"]), [7, 8])
+    assert int(buf["count"]) == 1
 
 
 def test_ring_wraparound():
