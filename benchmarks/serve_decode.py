@@ -16,16 +16,26 @@ Both servers share the same jitted stage callables (one ``DecodeFns``), so
 the delta is purely the exit machinery, and merged per-token logits are
 verified bitwise identical before timing. Run via
 ``PYTHONPATH=src python -m benchmarks.run --only serve_decode [--json]``.
+
+When >= 2 devices are visible (CI pins 8 host devices), each q also runs
+the STAGE-DISAGGREGATED ``DecodeServer`` — stage 1 on one submesh, the
+ring + stage-2 cache store + bucketed dispatches on the other, chips
+apportioned q-proportionally unless ``--chips1/--chips2`` override — and
+enforces bitwise token/logits parity against the single-device server
+before timing; per-stage device counts + occupancy ride in the ``--json``
+envelope.
 """
 from __future__ import annotations
 
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import table
+from benchmarks.serve_pipeline import make_disagg_placement
 from repro.core import early_exit as ee
 from repro.models.config import ArchConfig
 from repro.runtime import serve_loop as SL
@@ -60,7 +70,8 @@ def _time_decode(make_server, prompt, n_tokens: int, iters: int) -> tuple:
     return tps, stats
 
 
-def run(fast: bool = False) -> dict:
+def run(fast: bool = False, chips1: Optional[int] = None,
+        chips2: Optional[int] = None) -> dict:
     batch, seq = 64, 8
     n_tokens = 8 if fast else 16
     iters = 2 if fast else 3
@@ -73,7 +84,9 @@ def run(fast: bool = False) -> dict:
                                        max_len=seq + n_tokens)
     fns = SL.decode_stage_fns(params, cfg, spec0)  # c_thr never baked in
 
+    n_dev = jax.device_count()
     rows, data = [], {}
+    all_parity = True
     for q in Q_GRID:
         # C_thr at the q-quantile of confidence => a q token fraction hard
         c_thr = float(jnp.quantile(conf, q))
@@ -88,6 +101,24 @@ def run(fast: bool = False) -> dict:
                   and np.array_equal(od["tokens"], oh["tokens"]))
         assert parity, f"decode parity broke at q={q}"
 
+        # disaggregated parity gate BEFORE timing (>= 2 devices): submesh
+        # DecodeServer vs the single-device one, bit for bit
+        placement = make_disagg_placement(q, chips1, chips2)
+        c1 = placement.ex1.n_devices if placement else 1
+        c2 = placement.ex2.n_devices if placement else 1
+        occ = {}
+        dis_parity = True
+        if placement is not None:
+            spec = ee.EarlyExitSpec(exit_layer=spec0.exit_layer, c_thr=c_thr)
+            dis = SL.build_decode_server(params, cfg, spec, sc, placement)
+            odis = dis.generate(prompt, max(3, n_tokens // 4))
+            dis_parity = (np.array_equal(odis["logits"], od["logits"])
+                          and np.array_equal(odis["tokens"], od["tokens"]))
+            assert dis_parity, f"disaggregated decode parity broke at q={q}"
+            occ = {"stage1_occupancy": dis.stats.stage1_occupancy,
+                   "stage2_occupancy": dis.stats.stage2_occupancy}
+        all_parity &= dis_parity
+
         host_tps, host_stats = _time_decode(
             lambda: SL.HostLoopDecoder(fns, sc), prompt, n_tokens, iters)
         dev_tps, dev_stats = _time_decode(
@@ -96,19 +127,33 @@ def run(fast: bool = False) -> dict:
         rows.append([f"{q:.1f}", f"{dev_stats.realized_q:.2f}", capacity,
                      f"{host_tps:,.0f}", f"{dev_tps:,.0f}",
                      f"{speedup:.2f}x",
-                     f"{dev_stats.mean_bucket_fill:.2f}", parity])
+                     f"{dev_stats.mean_bucket_fill:.2f}", parity,
+                     f"{c1}+{c2}" if placement else "-"])
         data[f"q{q}"] = {"host_tps": host_tps, "device_tps": dev_tps,
                          "speedup": speedup, "parity": bool(parity),
-                         "realized_q": dev_stats.realized_q}
+                         "realized_q": dev_stats.realized_q,
+                         "chips1": c1, "chips2": c2,
+                         **occ}
 
+    # vacuously true on a 1-device host; CI pins 8 host devices
+    data["disagg"] = {"devices": n_dev, "checked": n_dev >= 2,
+                      "parity": bool(all_parity)}
     txt = table(
         "Decode serving: host-loop vs device-resident "
         f"(B={batch}, prompt={seq}, T={n_tokens}, "
-        f"backend={jax.default_backend()})",
+        f"backend={jax.default_backend()}, devices={n_dev})",
         ["q", "realized q", "bucket C", "host tok/s", "device tok/s",
-         "speedup", "bucket fill", "bitwise"], rows)
+         "speedup", "bucket fill", "bitwise", "submesh"], rows)
     return {"text": txt, **data}
 
 
 if __name__ == "__main__":
-    print(run()["text"])
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--chips1", type=int, default=None,
+                    help="stage-1 submesh size (default: plan-derived)")
+    ap.add_argument("--chips2", type=int, default=None,
+                    help="stage-2 submesh size (default: plan-derived)")
+    a = ap.parse_args()
+    print(run(fast=a.fast, chips1=a.chips1, chips2=a.chips2)["text"])

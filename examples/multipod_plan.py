@@ -1,15 +1,20 @@
 """Multi-pod deployment planning: run the ATHEENA LM optimizer for an
-assigned architecture, print the two-stage chip apportionment, and show the
-elastic-degradation replan (a pod loses 16 chips).
+assigned architecture, print the two-stage chip apportionment, hand the
+CombinedDesign straight to the stage-disaggregated executor path
+(StagePlacement.from_design -> disjoint submeshes, when enough devices are
+visible), and show the elastic-degradation replan (a pod loses 16 chips).
 
     PYTHONPATH=src python examples/multipod_plan.py --arch qwen2-7b
 """
 import argparse
 
+import jax
+
 from repro.core import dse
 from repro.core.stage_mesh import StageMeshPlan
 from repro.models.registry import get_arch, list_archs
 from repro.runtime.elastic import replan
+from repro.runtime.stage_executor import StagePlacement
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="qwen2-7b", choices=list_archs())
@@ -39,6 +44,22 @@ print(f"combined: {d.design_throughput:,.0f} samples/s = "
 print(f"robustness band: q=p-5% {d.throughput_at(args.p - 0.05):,.0f} | "
       f"q=p {d.throughput_at(args.p):,.0f} | "
       f"q=p+5% {d.throughput_at(args.p + 0.05):,.0f}")
+
+# --- the design goes straight into the serving runtime -----------------------
+# StagePlacement.from_design carves disjoint (data, model) submeshes per the
+# plan above; runtime.serve_loop.build_server(..., placement) then runs
+# stage 1 and stage 2 on them with per-stage resident params.
+n_dev = jax.device_count()
+if n_dev >= plan.chips1 + plan.chips2:
+    placement = StagePlacement.from_design(d)
+    print(f"\nexecutor path: {placement}")
+else:
+    print(f"\nexecutor path: needs {plan.chips1 + plan.chips2} devices, "
+          f"{n_dev} visible — on a CPU host export "
+          f"XLA_FLAGS=--xla_force_host_platform_device_count="
+          f"{plan.chips1 + plan.chips2} (or pass the plan to "
+          f"`python -m repro.launch.serve --disaggregate "
+          f"--chips1 {plan.chips1} --chips2 {plan.chips2}`)")
 
 # --- elastic: lose 16 chips, replan from the same TAPs -----------------------
 ep = replan(design.tap1, design.tap2, args.p, chips_before=args.chips,

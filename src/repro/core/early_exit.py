@@ -112,13 +112,21 @@ def stage1_prefill(params, cfg: ArchConfig, spec: EarlyExitSpec, tokens, *,
     return h, caches, logits, memory
 
 
+def _stage2_base_sb(cfg: ArchConfig, spec: EarlyExitSpec) -> int:
+    return (spec.exit_layer - cfg.first_k_dense) // cfg.pattern_len
+
+
 def stage2_prefill(params, cfg: ArchConfig, spec: EarlyExitSpec, h, *,
-                   memory=None):
+                   memory=None, presliced_params: bool = False):
     """Stage 2: layers [k,N) + final head on hard samples only.
-    h: (C, S, d) compacted slab. Returns (logits (C,V), caches_seg2)."""
+    h: (C, S, d) compacted slab. Returns (logits (C,V), caches_seg2).
+    ``presliced_params``: params is a stage-2 slice (ee.split_params), whose
+    'blocks' leaves start at the exit boundary."""
     bb = params["backbone"]
+    base = _stage2_base_sb(cfg, spec) if presliced_params else 0
     h, caches, _ = T.run_layers(bb, cfg, h, spec.exit_layer, cfg.n_layers,
-                                mode="prefill", memory=memory)
+                                mode="prefill", memory=memory,
+                                param_base_sb=base)
     return T.head(bb, cfg, h[:, -1]), caches
 
 
@@ -133,16 +141,19 @@ def stage1_decode(params, cfg: ArchConfig, spec: EarlyExitSpec, token, caches,
 
 
 def stage2_decode(params, cfg: ArchConfig, spec: EarlyExitSpec, h, caches,
-                  step, *, presliced: bool = True):
+                  step, *, presliced: bool = True,
+                  presliced_params: bool = False):
     """One-token stage 2 on the compacted hard slab. ``caches`` is the
     stage-2 SEGMENT cache (ee.split_caches) by default — its bucket batch
-    size differs from stage 1's, so the pytrees cannot be shared."""
+    size differs from stage 1's, so the pytrees cannot be shared.
+    ``presliced_params`` marks a stage-2 param slice (ee.split_params)."""
     bb = params["backbone"]
     base = ((spec.exit_layer - cfg.first_k_dense) // cfg.pattern_len
             if presliced else 0)
+    pbase = _stage2_base_sb(cfg, spec) if presliced_params else 0
     h, ncaches, _ = T.run_layers(bb, cfg, h, spec.exit_layer, cfg.n_layers,
                                  mode="decode", caches=caches, step=step,
-                                 cache_base_sb=base)
+                                 cache_base_sb=base, param_base_sb=pbase)
     return T.head(bb, cfg, h[:, 0]), ncaches
 
 
@@ -175,6 +186,54 @@ def split_caches(cfg: ArchConfig, spec: EarlyExitSpec, caches):
         "rem": caches["rem"],
     }
     return s1, s2
+
+
+def split_params(cfg: ArchConfig, spec: EarlyExitSpec, params):
+    """Slice the EE param tree into (stage1, stage2) resident sets — the
+    multi-accelerator analogue of ATHEENA's per-stage floorplan regions,
+    consumed by the StageExecutors (runtime/stage_executor.py) so each
+    stage's submesh holds only its own layers.
+
+    stage 1: embed + leading dense + superblocks [0, k_super) + exit head
+             (+ the unembedding the exit head reads — the tied table or the
+             untied 'head' matrix);
+    stage 2: superblocks [k_super, N) + remainder + final norm + its
+             unembedding. The unembedding both heads read is the one
+             tensor resident on BOTH submeshes (the tied table, or the
+             untied 'head' matrix — in which case the embed table stays on
+             stage 1 only); everything else lives on exactly one.
+
+    Slicing the stacked superblock leaves COPIES them (jnp slices are new
+    buffers), so only split when there are disjoint submeshes to place the
+    slices on — the degenerate single-device builders close over the full
+    tree instead. Stage-2 'blocks' leaves start at the exit boundary —
+    pass ``presliced_params=True`` to the stage-2 entry points (they
+    forward ``param_base_sb`` to run_layers)."""
+    bb = params["backbone"]
+    k_super = _stage2_base_sb(cfg, spec)
+    # the unembedding: T.head and exit_head read the tied table, or the
+    # separate 'head' matrix when untied (same fallback condition as both)
+    shared = {}
+    if cfg.tie_embeddings or "head" not in bb:
+        shared["embed"] = bb["embed"]
+    else:
+        shared["head"] = bb["head"]
+    bb1 = dict(shared)
+    bb1["embed"] = bb["embed"]               # embed_tokens is stage 1's
+    bb1["first"] = bb["first"]
+    bb1["blocks"] = jax.tree.map(lambda x: _slice0(x, 0, k_super),
+                                 bb["blocks"])
+    bb1["rem"] = []
+    if "encoder" in bb:                      # enc-dec: memory is stage 1's
+        bb1["encoder"] = bb["encoder"]
+    bb2 = dict(shared)
+    bb2["first"] = []
+    bb2["blocks"] = jax.tree.map(lambda x: _slice0(x, k_super, None),
+                                 bb["blocks"])
+    bb2["rem"] = bb["rem"]
+    bb2["final_norm"] = bb["final_norm"]
+    return ({"backbone": bb1, "exit_head": params["exit_head"]},
+            {"backbone": bb2})
 
 
 # ---------------------------------------------------------------------------

@@ -12,7 +12,27 @@ import numpy as np
 import jax
 
 from repro.core.perf_model import ShardPlan
-from repro.core.tap import CombinedDesign
+from repro.core.tap import CombinedDesign, DesignPoint
+
+
+def _recover_plan(point: DesignPoint, label: str) -> ShardPlan:
+    """Pull the ShardPlan out of a DesignPoint's meta. The LM DSE stores it
+    either at meta['plan'] (lm_sharding_dse) or meta['roofline']['plan'];
+    both lookups are validated so a design without a recoverable plan fails
+    loudly instead of yielding a None plan that breaks mesh carving later."""
+    meta = point.meta if isinstance(point.meta, dict) else {}
+    plan = meta.get("plan")
+    if plan is None:
+        roofline = meta.get("roofline")
+        if isinstance(roofline, dict):
+            plan = roofline.get("plan")
+    if not isinstance(plan, ShardPlan):
+        raise ValueError(
+            f"no ShardPlan recoverable from {label} DesignPoint meta "
+            f"(looked at meta['plan'] and meta['roofline']['plan'], got "
+            f"{type(plan).__name__}); was this design produced by the LM "
+            f"sharding DSE? meta keys: {sorted(meta)}")
+    return plan
 
 
 @dataclass(frozen=True)
@@ -22,29 +42,82 @@ class StageMeshPlan:
     plan1: ShardPlan
     plan2: ShardPlan
 
+    def __post_init__(self):
+        for i, (chips, plan) in enumerate(
+                ((self.chips1, self.plan1), (self.chips2, self.plan2)), 1):
+            if chips < 1:
+                raise ValueError(f"stage {i}: chips must be >= 1, got {chips}")
+            if plan.chips != chips:
+                raise ValueError(
+                    f"stage {i}: plan dp*tp = {plan.dp}*{plan.tp} = "
+                    f"{plan.chips} != chips{i} = {chips}")
+
     @classmethod
     def from_design(cls, design: CombinedDesign) -> "StageMeshPlan":
         return cls(
             chips1=int(design.stage1.resources[0]),
             chips2=int(design.stage2.resources[0]),
-            plan1=design.stage1.meta.get("plan") or
-            design.stage1.meta.get("roofline", {}).get("plan"),
-            plan2=design.stage2.meta.get("plan") or
-            design.stage2.meta.get("roofline", {}).get("plan"),
+            plan1=_recover_plan(design.stage1, "stage1"),
+            plan2=_recover_plan(design.stage2, "stage2"),
         )
 
+    @classmethod
+    def from_chips(cls, chips1: int, chips2: int) -> "StageMeshPlan":
+        """Pure data-parallel plan over explicit chip counts (the serve-CLI
+        path when no TAP design is in hand)."""
+        return cls(chips1=chips1, chips2=chips2,
+                   plan1=ShardPlan(dp=chips1, tp=1),
+                   plan2=ShardPlan(dp=chips2, tp=1))
 
-def make_stage_meshes(devices, plan: StageMeshPlan
-                      ) -> Tuple[jax.sharding.Mesh, jax.sharding.Mesh]:
-    """Carve two disjoint submeshes out of a flat device list. Stage 1 takes
-    the first chips1 devices, stage 2 the next chips2. Each submesh is
-    (data, model) shaped per its ShardPlan."""
-    devs = np.asarray(devices).reshape(-1)
+    @classmethod
+    def resolve(cls, p: float, n_devices: int,
+                chips1: Optional[int] = None,
+                chips2: Optional[int] = None) -> "StageMeshPlan":
+        """The CLI/benchmark resolution rule, in one place: explicit chip
+        counts when given (a missing one is the complement of the other
+        within ``n_devices``), else the p-proportional apportionment. An
+        explicit 0 is NOT treated as unset — it reaches the >= 1
+        validation and fails loudly."""
+        if chips1 is not None or chips2 is not None:
+            if chips1 is None:
+                chips1 = n_devices - chips2
+            if chips2 is None:
+                chips2 = n_devices - chips1
+            return cls.from_chips(chips1, chips2)
+        return cls.proportional(p, n_devices)
+
+    @classmethod
+    def proportional(cls, p: float, n_devices: int) -> "StageMeshPlan":
+        """p-proportional apportionment (ATHEENA §IV): stage 2 sees a p
+        fraction of the traffic, so it gets ~p of the chips, and stage 1
+        the rest — the default when no TAP curves have been profiled."""
+        if n_devices < 2:
+            raise ValueError(
+                f"disaggregation needs >= 2 devices, got {n_devices}")
+        chips2 = min(max(1, round(p * n_devices)), n_devices - 1)
+        return cls.from_chips(n_devices - chips2, chips2)
+
+
+def carve_stage_devices(devices, plan: StageMeshPlan
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Carve a flat device list into two disjoint (dp, tp) grids. Stage 1
+    takes the first chips1 devices, stage 2 the next chips2 — together they
+    cover exactly the first chips1+chips2 devices, never sharing one (the
+    'both stages resident' floorplan). Pure indexing, no jax state."""
+    devs = np.asarray(devices, dtype=object).reshape(-1)
     need = plan.chips1 + plan.chips2
     if len(devs) < need:
         raise ValueError(f"{need} chips required, {len(devs)} available")
     d1 = devs[:plan.chips1].reshape(plan.plan1.dp, plan.plan1.tp)
     d2 = devs[plan.chips1:need].reshape(plan.plan2.dp, plan.plan2.tp)
+    return d1, d2
+
+
+def make_stage_meshes(devices, plan: StageMeshPlan
+                      ) -> Tuple[jax.sharding.Mesh, jax.sharding.Mesh]:
+    """Carve two disjoint submeshes out of a flat device list; each submesh
+    is (data, model) shaped per its ShardPlan (see carve_stage_devices)."""
+    d1, d2 = carve_stage_devices(devices, plan)
     m1 = jax.sharding.Mesh(d1, ("data", "model"))
     m2 = jax.sharding.Mesh(d2, ("data", "model"))
     return m1, m2
@@ -55,7 +128,10 @@ def stage2_capacity(batch: int, p: float, multiple: int = 8,
     """Bucket size for the stage-2 hard-sample slab: ceil((p+slack)*B),
     rounded up to the sharding multiple (the conditional buffer's BRAM-slack
     analogue — over-provisioning stage 2 'increases robustness to variation
-    in the hard samples' exit probability', §IV-A)."""
+    in the hard samples' exit probability', §IV-A). Clamped to [1, batch]:
+    p=0 still provisions one `multiple`-sized bucket (the slack floor), p=1
+    yields the full batch, and a batch smaller than the sharding multiple
+    caps at the batch itself."""
     c = int(np.ceil((p + slack) * batch))
     c = max(multiple, ((c + multiple - 1) // multiple) * multiple)
-    return min(c, batch)
+    return max(1, min(c, batch))

@@ -22,6 +22,16 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]):
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
+def stage_submeshes(plan, devices=None):
+    """Two disjoint (data, model) submeshes for a two-stage EE deployment
+    (core.stage_mesh.StageMeshPlan), defaulting to the local device set —
+    the launch-layer entry the serve driver and examples build their
+    ``StagePlacement`` from."""
+    from repro.core.stage_mesh import make_stage_meshes
+    return make_stage_meshes(jax.devices() if devices is None else devices,
+                             plan)
+
+
 def batch_axes(mesh) -> Tuple[str, ...]:
     """Axes the global batch shards over: ('pod','data') when a pod axis
     exists, else ('data',)."""

@@ -10,20 +10,48 @@ batched requests with a controlled hard-fraction q.
 prefill of the prompts, then per-token two-stage decode where hard tokens'
 hidden rows + stage-2 KV-cache segment rows travel the pytree ring into
 bucketed stage-2 dispatches. Reports decode tokens/s + per-token stats —
-the runtime half of the ATHEENA pipeline in both regimes."""
+the runtime half of the ATHEENA pipeline in both regimes.
+
+``--disaggregate`` places the two stages on disjoint submeshes (the paper's
+§IV spatial apportionment): stage 1 + the exit kernels on the first chips1
+devices, the ring + stage 2 on the next chips2, with ``--chips1/--chips2``
+defaulting to the p-proportional split of the local device set. Needs >= 2
+devices — on a CPU host export
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` first."""
 from __future__ import annotations
 
 import argparse
 import json
 import time
+from typing import Optional
 
 import jax
 import numpy as np
 
 from repro.core import early_exit as ee
-from repro.core.stage_mesh import stage2_capacity
+from repro.core.stage_mesh import StageMeshPlan, stage2_capacity
+from repro.launch.mesh import stage_submeshes
+from repro.launch.shardings import stage_io_shardable
 from repro.models.registry import get_arch, get_smoke, list_archs
 from repro.runtime import serve_loop as SL
+from repro.runtime.stage_executor import StageExecutor, StagePlacement
+
+
+def make_placement(p: float, batch: int, chips1: Optional[int] = None,
+                   chips2: Optional[int] = None,
+                   devices=None) -> StagePlacement:
+    """Build the disaggregated placement for the serve CLI: explicit chip
+    counts when given, otherwise the p-proportional apportionment over the
+    local device set. Each stage's IO shards over its submesh 'data' axis
+    when the batch divides it (launch.shardings rule)."""
+    devs = jax.devices() if devices is None else devices
+    plan = StageMeshPlan.resolve(p, len(devs), chips1, chips2)
+    m1, m2 = stage_submeshes(plan, devs)
+    return StagePlacement(
+        StageExecutor(m1, shard_io=stage_io_shardable(m1, batch),
+                      name="stage1"),
+        StageExecutor(m2, shard_io=stage_io_shardable(m2, batch),
+                      name="stage2"))
 
 
 def main(argv=None) -> int:
@@ -41,6 +69,12 @@ def main(argv=None) -> int:
     ap.add_argument("--p", type=float, default=0.25,
                     help="design-time hard probability (sizes stage 2)")
     ap.add_argument("--c-thr", type=float, default=0.9)
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="stage 1 / stage 2 on disjoint submeshes")
+    ap.add_argument("--chips1", type=int, default=None,
+                    help="stage-1 submesh size (default: p-proportional)")
+    ap.add_argument("--chips2", type=int, default=None,
+                    help="stage-2 submesh size (default: p-proportional)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
@@ -49,8 +83,15 @@ def main(argv=None) -> int:
     cap = stage2_capacity(args.batch, args.p)
     sc = SL.ServeConfig(capacity=cap, c_thr=args.c_thr)
 
+    placement = None
+    if (args.disaggregate or args.chips1 is not None
+            or args.chips2 is not None):
+        placement = make_placement(args.p, args.batch, args.chips1,
+                                   args.chips2)
+        print(f"# {placement}")
+
     if args.mode == "decode":
-        server = SL.build_decode_server(params, cfg, spec, sc)
+        server = SL.build_decode_server(params, cfg, spec, sc, placement)
         prompts = np.asarray(jax.random.randint(
             jax.random.PRNGKey(1), (args.batch, args.seq), 0, cfg.vocab))
         t0 = time.perf_counter()
@@ -64,7 +105,7 @@ def main(argv=None) -> int:
                           **server.stats.as_dict()}, indent=1))
         return 0
 
-    server = SL.build_server(params, cfg, spec, sc)
+    server = SL.build_server(params, cfg, spec, sc, placement)
     toks = np.asarray(jax.random.randint(
         jax.random.PRNGKey(1), (args.requests, args.seq), 0, cfg.vocab))
     t0 = time.perf_counter()

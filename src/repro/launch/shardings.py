@@ -203,3 +203,13 @@ def cache_shardings(cfg: ArchConfig, mesh, cache_shapes_tree):
 
 def replicated(mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+# -- stage submeshes (two-stage EE serving) -----------------------------------
+
+def stage_io_shardable(mesh, global_batch: int) -> bool:
+    """Whether a stage submesh can shard its full-rate IO batch over its
+    'data' axis (the same divisibility rule as ``batch_spec``). The serve
+    driver uses this to decide each StageExecutor's ``shard_io`` — an
+    indivisible batch replicates rather than erroring."""
+    return bool(batch_spec(mesh, global_batch))

@@ -331,13 +331,15 @@ def embed_tokens(params, cfg: ArchConfig, tokens, frontend_embeds=None):
 
 def run_layers(params, cfg: ArchConfig, h, lo: int, hi: int, *, mode: str,
                caches=None, step=None, memory=None, causal: bool = True,
-               cache_base_sb: int = 0):
+               cache_base_sb: int = 0, param_base_sb: int = 0):
     """Run backbone layers [lo, hi). lo/hi must land on superblock boundaries
     (or 0 / n_layers). Returns (h, new_caches_for_segment, aux).
 
     ``cache_base_sb``: when the caller passes a PRE-SLICED segment cache
     (ee.split_caches output), the superblock index its 'blocks' leaves start
-    at — run_layers subtracts it before slicing."""
+    at — run_layers subtracts it before slicing. ``param_base_sb`` is the
+    same offset for a PRE-SLICED param tree (ee.split_params output, a
+    stage's resident slice on its own submesh)."""
     aux = jnp.zeros((), jnp.float32)
     new_caches: Dict[str, Any] = {"first": [], "blocks": None, "rem": []}
 
@@ -357,7 +359,8 @@ def run_layers(params, cfg: ArchConfig, h, lo: int, hi: int, *, mode: str,
     s_hi_layer = min(hi, cfg.first_k_dense + cfg.n_superblocks * pl)
     s_hi = max(s_lo, (s_hi_layer - cfg.first_k_dense) // pl)
     if s_hi > s_lo and cfg.n_superblocks:
-        seg_params = jax.tree.map(lambda x: x[s_lo:s_hi], params["blocks"])
+        p_lo, p_hi = s_lo - param_base_sb, s_hi - param_base_sb
+        seg_params = jax.tree.map(lambda x: x[p_lo:p_hi], params["blocks"])
         c_lo, c_hi = s_lo - cache_base_sb, s_hi - cache_base_sb
         seg_caches = (jax.tree.map(lambda x: x[c_lo:c_hi], caches["blocks"])
                       if caches else None)

@@ -1,1 +1,1 @@
-from repro.runtime import elastic, serve_loop, train_loop
+from repro.runtime import elastic, serve_loop, stage_executor, train_loop

@@ -62,9 +62,20 @@ correctness one. For decode rings each row additionally carries the sample's
 stage-2 cache segment, so ring bytes scale with ``max_len`` — size
 ``queue_depth`` down accordingly.
 
+**Stage disaggregation.** Every server runs over a ``StagePlacement``
+(runtime/stage_executor.py): stage 1 + the exit-decision kernels on one
+``StageExecutor``, the pytree ring + stage 2 on the other. With submeshes
+carved from a ``StageMeshPlan`` (chips apportioned to each stage in
+proportion to p — the paper's §IV spatial resource split), params are
+resident per stage (``ee.split_params``) and the hard-sample slab / bucket
+results hop between submeshes as ``jax.device_put`` transfers. The default
+placement is degenerate (no mesh, placement = identity), so single-device
+serving is the same hot loop, bit for bit — parity the disaggregation tests
+enforce under ``--xla_force_host_platform_device_count``.
+
 The runtime tracks realized q *per decision* (= per sample for prefill, per
-token for decode) and reports occupancy/stall statistics so a deployment can
-re-plan (``core.stage_mesh``) when drift is persistent.
+token for decode) and reports per-stage occupancy/stall statistics so a
+deployment can re-plan (``core.stage_mesh``) when drift is persistent.
 """
 from __future__ import annotations
 
@@ -83,6 +94,7 @@ from repro.core import exit_decision as ed
 from repro.kernels import dispatch
 from repro.models import transformer as T
 from repro.models.config import ArchConfig
+from repro.runtime.stage_executor import StagePlacement
 
 
 @dataclass
@@ -102,16 +114,32 @@ class ServeStats:
     ``n_decisions`` counts exit decisions — equal for prefill (one decision
     per sample), ``n_samples * generated_tokens`` for decode. ``realized_q``
     is therefore per-decision, which is the quantity the stage-2 bucket is
-    provisioned against in both regimes."""
+    provisioned against in both regimes.
+
+    Per-stage occupancy (the TAP apportionment feedback signal): a stage-1
+    "cycle" is either a real dispatch (one batch/step) or a forced-drain
+    stall — a cycle spent waiting on stage 2 because the ring was full
+    (every server counts ``n_stalls`` per forced drain, so one batch under
+    heavy backpressure can stall several times). ``stage1_occupancy`` is
+    the fraction of cycles doing stage-1 work; q > p pushes it below 1,
+    the paper's Fig. 4 lower band. Stage 2's slots are its bucket lanes —
+    ``stage2_occupancy`` is the fraction carrying real hard samples
+    rather than flush padding (q < p pushes it below 1: bucket bubbles).
+    ``stage1_chips``/``stage2_chips`` record the submesh sizes the serving
+    placement apportioned (1/1 for single-device)."""
     n_samples: int = 0
     n_decisions: int = 0
     n_exited: int = 0
     n_stage2: int = 0
     n_stalls: int = 0
+    n_stage1_batches: int = 0       # stage-1 dispatches (batches / steps)
     n_buckets: int = 0              # running aggregate, O(1) memory
     bucket_fill_sum: float = 0.0
+    stage1_chips: int = 1
+    stage2_chips: int = 1
 
     def record_decisions(self, n: int, n_hard: int) -> None:
+        self.n_stage1_batches += 1
         self.n_decisions += n
         self.n_exited += n - n_hard
 
@@ -119,9 +147,23 @@ class ServeStats:
         self.n_buckets += 1
         self.bucket_fill_sum += fill
 
+    def record_placement(self, placement: StagePlacement) -> None:
+        self.stage1_chips = placement.ex1.n_devices
+        self.stage2_chips = placement.ex2.n_devices
+
     @property
     def mean_bucket_fill(self) -> float:
         return self.bucket_fill_sum / self.n_buckets if self.n_buckets else 0.0
+
+    @property
+    def stage1_occupancy(self) -> float:
+        total = self.n_stage1_batches + self.n_stalls
+        return self.n_stage1_batches / total if total else 0.0
+
+    @property
+    def stage2_occupancy(self) -> float:
+        # buckets share one capacity, so the mean fill IS the slot occupancy
+        return self.mean_bucket_fill
 
     @property
     def realized_q(self) -> float:
@@ -136,7 +178,11 @@ class ServeStats:
                 "n_exited": self.n_exited, "n_stage2": self.n_stage2,
                 "n_stalls": self.n_stalls, "realized_q": self.realized_q,
                 "decisions_per_sample": self.decisions_per_sample,
-                "mean_bucket_fill": self.mean_bucket_fill}
+                "mean_bucket_fill": self.mean_bucket_fill,
+                "stage1_chips": self.stage1_chips,
+                "stage2_chips": self.stage2_chips,
+                "stage1_occupancy": self.stage1_occupancy,
+                "stage2_occupancy": self.stage2_occupancy}
 
 
 # ---------------------------------------------------------------------------
@@ -241,10 +287,15 @@ def _decide_compact(hidden, exit_logits, sample_ids, c_thr, *, backend):
 # ---------------------------------------------------------------------------
 
 class _RingedServer:
-    def __init__(self, sc: ServeConfig):
+    def __init__(self, sc: ServeConfig,
+                 placement: Optional[StagePlacement] = None):
         self.sc = sc
+        self.placement = placement or StagePlacement.single_device()
+        self.ex1 = self.placement.ex1
+        self.ex2 = self.placement.ex2    # the ring + stage 2 live here
         self.size = sc.queue_depth * sc.capacity
         self.stats = ServeStats()
+        self.stats.record_placement(self.placement)
         self._buf: Optional[dict] = None
         self._count = 0                   # host mirror of buf['count']
 
@@ -256,12 +307,19 @@ class _RingedServer:
         chunks, stalling (draining) whenever the ring is out of space — so
         a batch hairier than the whole ring still serves, it just
         backpressures stage 1 harder (Fig. 7 story). Full buckets drain
-        first by construction (count == size when stalled)."""
+        first by construction (count == size when stalled).
+
+        The slab arrives from stage 1; placing it onto ``ex2`` IS the
+        stage-boundary hop — under a disaggregated placement that is a
+        device-to-device ``jax.device_put`` across submesh shardings, and
+        the ring itself is resident on stage 2's submesh."""
+        slab_tree = self.ex2.place_io(slab_tree)
+        slab_ids = self.ex2.place_io(slab_ids)
         if self._buf is None:
             spec = jax.tree.map(
                 lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
                 slab_tree)
-            self._buf = ring_init(self.size, spec)
+            self._buf = self.ex2.place_io(ring_init(self.size, spec))
         off = 0
         while off < n_hard:
             free = self.size - self._count
@@ -298,8 +356,15 @@ class TwoStageServer(_RingedServer):
 
     stage1_fn: tokens (B, S) -> (hidden, exit_logits)
     stage2_fn: hidden slab (C, S, d) -> final logits (C, V)
-    In a stage-mesh deployment each callable is jitted onto its own submesh
-    (launch/serve.py); here they may share one device.
+
+    ``placement`` decides WHERE: stage 1 (and the exit-decision kernels) on
+    ``placement.ex1``, the ring and stage 2 on ``placement.ex2``. With a
+    disaggregated placement (StagePlacement.from_plan over disjoint
+    submeshes) the callables must close over params placed on their own
+    executor (``_stage_fns`` does this), and the hard-slab enqueue becomes
+    a device-to-device transfer across the submesh boundary. The default
+    placement is the degenerate single-device one — the hot path is then
+    identical to a placement-unaware server, bit for bit.
 
     ``submit`` keeps everything on device: one jitted step runs stage 1 +
     fused exit decision + compaction, the hard slab is enqueued into the
@@ -310,8 +375,9 @@ class TwoStageServer(_RingedServer):
     """
 
     def __init__(self, stage1_fn: Callable, stage2_fn: Callable,
-                 sc: ServeConfig):
-        super().__init__(sc)
+                 sc: ServeConfig,
+                 placement: Optional[StagePlacement] = None):
+        super().__init__(sc, placement)
         self.stage1 = stage1_fn
         self.stage2 = stage2_fn
         # pending device futures, collected at flush()
@@ -370,8 +436,9 @@ class TwoStageServer(_RingedServer):
         are harvested (backlog > ``max_pending``) and at ``flush()`` —
         unlike HostLoopServer, a sample's logits are NOT guaranteed to be
         present right after the submit that resolved it."""
-        tokens = jnp.asarray(tokens)
-        ids_dev = jnp.asarray(np.asarray(sample_ids, np.int32))
+        tokens = self.ex1.place_io(jnp.asarray(tokens))
+        ids_dev = self.ex1.place_io(jnp.asarray(np.asarray(sample_ids,
+                                                           np.int32)))
         hidden, exit_logits = self.stage1(tokens)
         slab, slab_ids, n_hard_dev, exit_mask = _decide_compact(
             hidden, exit_logits, ids_dev, self.sc.c_thr,
@@ -451,11 +518,11 @@ class HostLoopServer:
             exit_logits, self.sc.c_thr)
         exit_mask = np.asarray(exit_mask)
         self.stats.n_samples += len(sample_ids)
-        self.stats.n_decisions += len(sample_ids)
+        self.stats.record_decisions(len(sample_ids),
+                                    int((~exit_mask).sum()))
         for i, sid in enumerate(sample_ids):
             if exit_mask[i]:
                 results[sid] = np.asarray(exit_logits[i])
-                self.stats.n_exited += 1
             else:
                 if len(self.queue) >= self.sc.queue_depth * self.sc.capacity:
                     self.stats.n_stalls += 1
@@ -536,11 +603,31 @@ class DecodeFns(NamedTuple):
     s2: Callable        # (h (C,d), cache_rows, step) -> (logits, new_rows)
 
 
-def decode_stage_fns(params, cfg: ArchConfig, spec: ee.EarlyExitSpec
-                     ) -> DecodeFns:
+def decode_stage_fns(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
+                     placement: Optional[StagePlacement] = None) -> DecodeFns:
+    """Jitted decode callables with per-stage residency: the one-shot
+    full-depth prefill (and its cache split) runs on ex1 with the full
+    param tree, per-step stage 1 closes over the stage-1 slice on ex1, and
+    the bucketed stage-2 decode closes over the stage-2 slice on ex2.
+    Degenerate placement = everything on the default device, the same
+    programs as before."""
+    pl = placement or StagePlacement.single_device()
+    # ex1 holds the FULL tree (the one-shot prefill needs every layer);
+    # per-step stage 1 closes over the same placed tree rather than a
+    # second stage-1 slice, so stage-1 params are resident once, not twice.
+    # The stage-2 slice is only cut (a copy of its superblock leaves) when
+    # there is a second submesh to put it on.
+    presliced = pl.disaggregated
+    p_full = pl.ex1.place(params)
+    if presliced:
+        _, p2 = ee.split_params(cfg, spec, params)
+        p2 = pl.ex2.place(p2)
+    else:
+        p2 = params
+
     @functools.partial(jax.jit, static_argnames=("max_len",))
     def pf(tokens, max_len: int):
-        logits, caches, _ = T.prefill(params["backbone"], cfg, tokens,
+        logits, caches, _ = T.prefill(p_full["backbone"], cfg, tokens,
                                       max_len=max_len)
         return logits, caches
 
@@ -551,14 +638,15 @@ def decode_stage_fns(params, cfg: ArchConfig, spec: ee.EarlyExitSpec
 
     @functools.partial(jax.jit, donate_argnums=(1,))
     def s1(tok, c1, step):
-        h, nc1, exit_logits = ee.stage1_decode(params, cfg, spec, tok, c1,
+        h, nc1, exit_logits = ee.stage1_decode(p_full, cfg, spec, tok, c1,
                                                step)
         return h[:, 0], nc1, exit_logits
 
     @functools.partial(jax.jit, donate_argnums=(1,))
     def s2(h_rows, cache_rows, step):
-        logits, nc = ee.stage2_decode(params, cfg, spec, h_rows[:, None],
-                                      cache_of_rows(cache_rows), step)
+        logits, nc = ee.stage2_decode(p2, cfg, spec, h_rows[:, None],
+                                      cache_of_rows(cache_rows), step,
+                                      presliced_params=presliced)
         return logits, cache_rows_of(nc)
 
     return DecodeFns(pf, split, s1, s2)
@@ -595,10 +683,18 @@ class DecodeServer(_RingedServer):
     the host baseline). The only per-step host sync is the scalar
     ``n_hard``; merged per-step logits are harvested lazily under
     ``max_pending``.
+
+    Under a disaggregated ``placement`` the stage-2 cache store, the ring
+    and the bucketed ``stage2_decode`` dispatches live on ``ex2``'s submesh
+    while stage 1, the exit kernels and the merged logits stay on ``ex1``:
+    each step's hard slab hops ex1 -> ex2 (enqueue) and each bucket's
+    logits hop ex2 -> ex1 (exit merge) as ``jax.device_put`` transfers —
+    never through the host.
     """
 
-    def __init__(self, fns: DecodeFns, sc: ServeConfig):
-        super().__init__(sc)
+    def __init__(self, fns: DecodeFns, sc: ServeConfig,
+                 placement: Optional[StagePlacement] = None):
+        super().__init__(sc, placement)
         self.fns = fns
         self._c1 = None          # stage-1 segment caches (run_layers layout)
         self._rows = None        # stage-2 segment cache, sample-major rows
@@ -620,7 +716,8 @@ class DecodeServer(_RingedServer):
 
     def _step(self, tok, pos: int):
         """One decode step for the whole batch; returns merged (B, V)
-        logits (device). Ring drains fully — decode is step-synchronous."""
+        logits (device, on ex1). Ring drains fully — decode is
+        step-synchronous."""
         h_rows, self._c1, exit_logits = self.fns.s1(tok, self._c1, pos)
         slab, slab_ids, n_hard_dev, _ = _decide_compact(
             h_rows, exit_logits, self._ids, self.sc.c_thr,
@@ -631,6 +728,10 @@ class DecodeServer(_RingedServer):
         self._pos = pos
         self._step_buckets = []
         if n_hard > 0:
+            # ex1 -> ex2 hop: the id lane crosses first (the cache gather
+            # runs ON ex2 — the store never leaves stage 2's submesh); the
+            # hidden slab crosses inside the enqueue's place_io
+            slab_ids = self.ex2.place_io(slab_ids)
             cache_slab = _gather_rows(self._rows, slab_ids)
             self._enqueue_backpressured({"h": slab, "cache": cache_slab},
                                         slab_ids, n_hard)
@@ -638,7 +739,10 @@ class DecodeServer(_RingedServer):
             self._drain()
         merged = exit_logits
         for bucket_ids, logits in self._step_buckets:
-            merged = _merge_bucket_logits(merged, bucket_ids, logits)
+            # ex2 -> ex1 hop: bucket results come home for the exit merge
+            merged = _merge_bucket_logits(merged,
+                                          self.ex1.place_io(bucket_ids),
+                                          self.ex1.place_io(logits))
         return merged
 
     # -- public --------------------------------------------------------------
@@ -650,13 +754,16 @@ class DecodeServer(_RingedServer):
         'logits' (B, n_tokens, V)} as host arrays."""
         if n_tokens < 1:
             raise ValueError(f"n_tokens must be >= 1, got {n_tokens}")
-        prompt = jnp.asarray(np.asarray(prompt, np.int32))
+        prompt = self.ex1.place_io(jnp.asarray(np.asarray(prompt, np.int32)))
         B, S = prompt.shape
         self.stats.n_samples += B
         self._buf, self._count = None, 0     # fresh ring per stream shape
-        self._ids = jnp.arange(B, dtype=jnp.int32)
+        self._ids = self.ex1.place_io(jnp.arange(B, dtype=jnp.int32))
         logits0, caches = self.fns.prefill(prompt, S + n_tokens)
-        self._c1, self._rows = self.fns.split(caches)
+        self._c1, rows = self.fns.split(caches)
+        # the stage-2 cache store migrates to its home submesh once, at
+        # stream start (prefill itself runs on ex1, which holds full params)
+        self._rows = self.ex2.place_io(rows)
         merged = logits0
         logits_out: List = [None] * n_tokens
         toks_out: List = []
@@ -739,25 +846,48 @@ class HostLoopDecoder:
 # builders
 # ---------------------------------------------------------------------------
 
-def _stage_fns(params, cfg: ArchConfig, spec: ee.EarlyExitSpec):
+def _stage_fns(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
+               placement: Optional[StagePlacement] = None):
+    """Per-stage jitted prefill callables. Disaggregated: each closes over
+    ITS stage's param slice placed on its executor (ee.split_params) —
+    stage-1 layers + exit head resident on ex1, stage-2 layers + final
+    head on ex2. Degenerate: both close over the caller's full tree
+    (slicing would COPY the superblock leaves for no placement benefit);
+    the sliced and full-tree programs are bitwise-identical, which the
+    disaggregation tests enforce."""
+    pl = placement or StagePlacement.single_device()
+    presliced = pl.disaggregated
+    if presliced:
+        p1, p2 = ee.split_params(cfg, spec, params)
+        p1 = pl.ex1.place(p1)
+        p2 = pl.ex2.place(p2)
+    else:
+        p1 = p2 = params
+
     @jax.jit
     def s1(tokens):
-        h, _, logits, _ = ee.stage1_prefill(params, cfg, spec, tokens)
+        h, _, logits, _ = ee.stage1_prefill(p1, cfg, spec, tokens)
         return h, logits
 
     @jax.jit
     def s2(slab):
-        logits, _ = ee.stage2_prefill(params, cfg, spec, slab)
+        logits, _ = ee.stage2_prefill(p2, cfg, spec, slab,
+                                      presliced_params=presliced)
         return logits
 
     return s1, s2
 
 
 def build_server(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
-                 sc: ServeConfig) -> TwoStageServer:
-    """Single-host device-resident server over the EE model."""
-    s1, s2 = _stage_fns(params, cfg, spec)
-    return TwoStageServer(s1, s2, sc)
+                 sc: ServeConfig,
+                 placement: Optional[StagePlacement] = None
+                 ) -> TwoStageServer:
+    """Device-resident server over the EE model; pass a disaggregated
+    ``placement`` (StagePlacement.from_plan / from_design) to run stage 1
+    and stage 2 on disjoint submeshes — single-device is the default
+    degenerate placement, not a separate path."""
+    s1, s2 = _stage_fns(params, cfg, spec, placement)
+    return TwoStageServer(s1, s2, sc, placement)
 
 
 def build_host_server(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
@@ -768,9 +898,13 @@ def build_host_server(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
 
 
 def build_decode_server(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
-                        sc: ServeConfig) -> DecodeServer:
-    """Single-host device-resident decode server over the EE model."""
-    return DecodeServer(decode_stage_fns(params, cfg, spec), sc)
+                        sc: ServeConfig,
+                        placement: Optional[StagePlacement] = None
+                        ) -> DecodeServer:
+    """Device-resident decode server over the EE model (disaggregated when
+    given a submesh ``placement``, single-device otherwise)."""
+    return DecodeServer(decode_stage_fns(params, cfg, spec, placement), sc,
+                        placement)
 
 
 def build_host_decoder(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,

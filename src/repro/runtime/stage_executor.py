@@ -1,0 +1,150 @@
+"""Placement-aware stage execution: WHERE a stage's params live, HOW its
+inputs/outputs are sharded there, and HOW work reaches it.
+
+ATHEENA's core move is spatial — both network stages resident at once, each
+on its own slice of the fabric, resources apportioned by the exit
+probability p (paper §IV). ``StageExecutor`` is the multi-accelerator
+analogue of one stage's floorplan region: it owns a submesh (or the
+process-default device), places that stage's parameter slice and IO there,
+and moves pytrees across the stage boundary with ``jax.device_put`` across
+shardings — a device-to-device transfer, never a host round-trip.
+
+``StagePlacement`` pairs the two executors and is what the servers in
+``runtime/serve_loop.py`` take: single-device serving is the DEGENERATE
+placement (no mesh, every ``place`` an identity), not a separate code path,
+so the disaggregated and single-device servers share one hot loop and stay
+bitwise identical.
+
+IO sharding: an executor built with ``shard_io=True`` (the default for
+mesh-backed executors) spreads batch-leading tensors over its submesh's
+``data`` axis when the leading dim divides it, falling back to replication
+per leaf otherwise (hard-sample slabs have capacity-sized leading dims that
+rarely divide dp). Parameters are placed replicated over the submesh —
+tensor-parallel placement within a stage rides the same ``param_spec``
+machinery (launch/shardings.py) and is left to the caller via ``place``'s
+``spec`` argument.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.stage_mesh import StageMeshPlan, make_stage_meshes
+
+
+class StageExecutor:
+    """One stage's placement + dispatch context.
+
+    mesh=None is the degenerate single-device executor: ``place`` returns
+    its argument untouched (no transfer, no commitment), so servers built
+    on it behave byte-for-byte like the pre-placement code.
+    """
+
+    def __init__(self, mesh: Optional[Mesh] = None, *, shard_io: bool = True,
+                 name: str = "stage"):
+        self.mesh = mesh
+        self.shard_io = shard_io
+        self.name = name
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def devices(self) -> Tuple:
+        if self.mesh is None:
+            return ()
+        return tuple(self.mesh.devices.flat)
+
+    @property
+    def n_devices(self) -> int:
+        return max(1, len(self.devices))
+
+    def __repr__(self) -> str:
+        if self.mesh is None:
+            return f"StageExecutor({self.name}: default device)"
+        return (f"StageExecutor({self.name}: {self.n_devices} devices "
+                f"{sorted(d.id for d in self.devices)}, "
+                f"shape {dict(self.mesh.shape)})")
+
+    # -- shardings -----------------------------------------------------------
+
+    def sharding(self, spec: P = P()) -> Optional[NamedSharding]:
+        """NamedSharding on this stage's submesh (None when degenerate)."""
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+    def _io_spec(self, lead: int) -> P:
+        """Batch-leading IO spec: over 'data' when the leading dim divides
+        it, replicated otherwise."""
+        if not self.shard_io:
+            return P()
+        dp = self.mesh.shape.get("data", 1)
+        return P("data") if dp > 1 and lead % dp == 0 else P()
+
+    # -- placement / transfer ------------------------------------------------
+
+    def place(self, tree, spec: P = P()):
+        """Commit a pytree onto this stage (replicated by default). Cross-
+        executor calls ARE the stage-boundary transfer: ``jax.device_put``
+        onto a sharding of a disjoint submesh moves the bytes device-to-
+        device. Degenerate executors return the tree untouched."""
+        if self.mesh is None:
+            return tree
+        return jax.device_put(tree, self.sharding(spec))
+
+    def place_io(self, tree):
+        """Commit batch-leading IO tensors (tokens, id lanes, slabs, ring
+        payloads) onto this stage, sharding axis 0 over 'data' where it
+        divides — per leaf, so a capacity-sized slab that doesn't divide dp
+        replicates while the request batch shards."""
+        if self.mesh is None:
+            return tree
+        return jax.tree.map(
+            lambda x: jax.device_put(
+                x, self.sharding(
+                    self._io_spec(x.shape[0]) if np.ndim(x) else P())),
+            tree)
+
+
+class StagePlacement:
+    """The two-stage deployment: stage 1 (full-rate, exit decision) on one
+    executor, stage 2 (hard samples, ring + buckets) on the other."""
+
+    def __init__(self, ex1: Optional[StageExecutor] = None,
+                 ex2: Optional[StageExecutor] = None):
+        self.ex1 = ex1 if ex1 is not None else StageExecutor(name="stage1")
+        self.ex2 = ex2 if ex2 is not None else StageExecutor(name="stage2")
+
+    @property
+    def disaggregated(self) -> bool:
+        return self.ex1.mesh is not None or self.ex2.mesh is not None
+
+    def __repr__(self) -> str:
+        return f"StagePlacement({self.ex1!r}, {self.ex2!r})"
+
+    @classmethod
+    def single_device(cls) -> "StagePlacement":
+        """The degenerate placement every ``build_*`` factory defaults to."""
+        return cls()
+
+    @classmethod
+    def from_plan(cls, plan: StageMeshPlan, devices=None, *,
+                  shard_io: bool = True) -> "StagePlacement":
+        """Carve disjoint submeshes for a StageMeshPlan (chips apportioned
+        by p via the TAP design) out of ``devices`` (default: all local)."""
+        devs = jax.devices() if devices is None else devices
+        m1, m2 = make_stage_meshes(devs, plan)
+        return cls(StageExecutor(m1, shard_io=shard_io, name="stage1"),
+                   StageExecutor(m2, shard_io=shard_io, name="stage2"))
+
+    @classmethod
+    def from_design(cls, design, devices=None, *,
+                    shard_io: bool = True) -> "StagePlacement":
+        """Straight from a TAP ``CombinedDesign`` (core/tap.combine or
+        dse.atheena_optimize_lm): extract the StageMeshPlan and carve."""
+        return cls.from_plan(StageMeshPlan.from_design(design),
+                             devices, shard_io=shard_io)

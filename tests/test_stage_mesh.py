@@ -1,0 +1,183 @@
+"""Stage-mesh planning: ShardPlan recovery from TAP design points (both
+meta layouts, loud failure otherwise), device carving invariants (disjoint
+coverage — hypothesis property), and stage2_capacity edge cases."""
+import numpy as np
+import pytest
+
+from repro.core import stage_mesh as sm
+from repro.core.perf_model import ShardPlan
+from repro.core.tap import CombinedDesign, DesignPoint
+
+
+def _design(meta1, meta2, chips1=4, chips2=2):
+    return CombinedDesign(
+        stage1=DesignPoint(resources=(chips1,), throughput=100.0, meta=meta1),
+        stage2=DesignPoint(resources=(chips2,), throughput=40.0, meta=meta2),
+        p=0.25, design_throughput=100.0)
+
+
+# ---------------------------------------------------------------------------
+# StageMeshPlan.from_design: plan extraction must validate both lookups
+# ---------------------------------------------------------------------------
+
+def test_from_design_direct_plan():
+    p1, p2 = ShardPlan(dp=2, tp=2), ShardPlan(dp=2, tp=1)
+    plan = sm.StageMeshPlan.from_design(
+        _design({"plan": p1}, {"plan": p2}))
+    assert (plan.chips1, plan.chips2) == (4, 2)
+    assert plan.plan1 is p1 and plan.plan2 is p2
+
+
+def test_from_design_roofline_nested_plan():
+    p1, p2 = ShardPlan(dp=4, tp=1), ShardPlan(dp=1, tp=2)
+    plan = sm.StageMeshPlan.from_design(
+        _design({"roofline": {"plan": p1}}, {"roofline": {"plan": p2}}))
+    assert plan.plan1 is p1 and plan.plan2 is p2
+
+
+@pytest.mark.parametrize("meta", [
+    {},                                   # nothing to recover
+    {"roofline": 3.14},                   # roofline not a dict (the old
+                                          # .get chain crashed on this)
+    {"roofline": {}},                     # dict but no plan
+    {"plan": "dp2tp2"},                   # plan of the wrong type
+    {"roofline": {"plan": None}},
+])
+def test_from_design_unrecoverable_plan_raises(meta):
+    ok = {"plan": ShardPlan(dp=2, tp=1)}
+    with pytest.raises(ValueError, match="no ShardPlan recoverable"):
+        sm.StageMeshPlan.from_design(_design(meta, ok, chips1=2))
+    with pytest.raises(ValueError, match="no ShardPlan recoverable"):
+        sm.StageMeshPlan.from_design(_design(ok, meta, chips1=2))
+
+
+def test_plan_chip_mismatch_raises():
+    with pytest.raises(ValueError, match="!= chips1"):
+        sm.StageMeshPlan(chips1=4, chips2=2, plan1=ShardPlan(dp=3, tp=1),
+                         plan2=ShardPlan(dp=2, tp=1))
+    with pytest.raises(ValueError, match=">= 1"):
+        sm.StageMeshPlan(chips1=0, chips2=2, plan1=ShardPlan(dp=1, tp=1),
+                         plan2=ShardPlan(dp=2, tp=1))
+
+
+def test_resolve_explicit_zero_rejected():
+    """resolve must not absorb an explicit chips=0 via truthiness — it
+    reaches the >= 1 validation; a missing count is the complement."""
+    plan = sm.StageMeshPlan.resolve(0.25, 8, chips1=None, chips2=None)
+    assert (plan.chips1, plan.chips2) == (6, 2)      # p-proportional
+    plan = sm.StageMeshPlan.resolve(0.25, 8, chips1=5, chips2=None)
+    assert (plan.chips1, plan.chips2) == (5, 3)      # complement
+    plan = sm.StageMeshPlan.resolve(0.25, 8, chips1=None, chips2=3)
+    assert (plan.chips1, plan.chips2) == (5, 3)
+    with pytest.raises(ValueError, match=">= 1"):
+        sm.StageMeshPlan.resolve(0.25, 8, chips1=0, chips2=2)
+    with pytest.raises(ValueError, match=">= 1"):
+        sm.StageMeshPlan.resolve(0.25, 8, chips1=0, chips2=None)
+
+
+def test_proportional_apportionment():
+    plan = sm.StageMeshPlan.proportional(0.25, 8)
+    assert (plan.chips1, plan.chips2) == (6, 2)
+    # extremes keep both stages resident (>= 1 chip each)
+    assert sm.StageMeshPlan.proportional(0.0, 8).chips2 == 1
+    assert sm.StageMeshPlan.proportional(1.0, 8).chips1 == 1
+    with pytest.raises(ValueError):
+        sm.StageMeshPlan.proportional(0.5, 1)
+
+
+# ---------------------------------------------------------------------------
+# device carving: disjointness + exact coverage
+# ---------------------------------------------------------------------------
+
+def test_carve_insufficient_devices():
+    plan = sm.StageMeshPlan.from_chips(4, 4)
+    with pytest.raises(ValueError, match="8 chips required"):
+        sm.carve_stage_devices(list(range(6)), plan)
+
+
+def test_carve_shapes_follow_shard_plans():
+    plan = sm.StageMeshPlan(chips1=4, chips2=2, plan1=ShardPlan(dp=2, tp=2),
+                            plan2=ShardPlan(dp=1, tp=2))
+    d1, d2 = sm.carve_stage_devices(list(range(8)), plan)
+    assert d1.shape == (2, 2) and d2.shape == (1, 2)
+    assert sorted(d1.flat) == [0, 1, 2, 3] and sorted(d2.flat) == [4, 5]
+
+
+def test_make_stage_meshes_on_real_devices():
+    """Mesh construction over the actual local device list (degenerate
+    1+... splits skip when the host exposes a single device)."""
+    import jax
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices (CI disaggregated job)")
+    n = jax.device_count()
+    plan = sm.StageMeshPlan.from_chips(n - 1, 1)
+    m1, m2 = sm.make_stage_meshes(jax.devices(), plan)
+    ids1 = {d.id for d in m1.devices.flat}
+    ids2 = {d.id for d in m2.devices.flat}
+    assert not ids1 & ids2
+    assert len(ids1) == n - 1 and len(ids2) == 1
+    assert m1.axis_names == ("data", "model")
+
+
+def test_carve_property_disjoint_exact_cover():
+    """Hypothesis property: for any shard-plan pair, the carved stage
+    device sets are disjoint and cover exactly the first chips1+chips2
+    devices (order preserved within each grid)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    small = st.integers(min_value=1, max_value=4)
+
+    @hyp.given(dp1=small, tp1=small, dp2=small, tp2=small,
+               extra=st.integers(min_value=0, max_value=3))
+    @hyp.settings(deadline=None, max_examples=60)
+    def prop(dp1, tp1, dp2, tp2, extra):
+        c1, c2 = dp1 * tp1, dp2 * tp2
+        plan = sm.StageMeshPlan(chips1=c1, chips2=c2,
+                                plan1=ShardPlan(dp=dp1, tp=tp1),
+                                plan2=ShardPlan(dp=dp2, tp=tp2))
+        devices = [f"dev{i}" for i in range(c1 + c2 + extra)]
+        d1, d2 = sm.carve_stage_devices(devices, plan)
+        s1, s2 = set(d1.flat), set(d2.flat)
+        assert d1.shape == (dp1, tp1) and d2.shape == (dp2, tp2)
+        assert len(s1) == c1 and len(s2) == c2        # no duplicates
+        assert not s1 & s2                            # disjoint
+        assert s1 | s2 == set(devices[:c1 + c2])      # exact cover
+        assert list(d1.flat) == devices[:c1]          # order preserved
+        assert list(d2.flat) == devices[c1:c1 + c2]
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# stage2_capacity edge cases
+# ---------------------------------------------------------------------------
+
+def test_stage2_capacity_p_zero():
+    """p=0 still provisions one multiple-sized bucket (slack floor)."""
+    assert sm.stage2_capacity(64, 0.0) == 8
+    assert sm.stage2_capacity(64, 0.0, slack=0.0) == 8
+
+
+def test_stage2_capacity_p_one():
+    """p=1 (+slack) caps at the full batch."""
+    assert sm.stage2_capacity(64, 1.0) == 64
+    assert sm.stage2_capacity(128, 1.0, slack=0.5) == 128
+
+
+def test_stage2_capacity_batch_below_multiple():
+    """A batch smaller than the sharding multiple caps at the batch."""
+    assert sm.stage2_capacity(4, 0.5) == 4
+    assert sm.stage2_capacity(1, 1.0) == 1
+    assert sm.stage2_capacity(7, 0.0, multiple=8) == 7
+
+
+@pytest.mark.parametrize("batch", [1, 4, 8, 33, 128])
+@pytest.mark.parametrize("p", [0.0, 0.1, 0.25, 0.5, 0.99, 1.0])
+def test_stage2_capacity_invariants(batch, p):
+    cap = sm.stage2_capacity(batch, p)
+    assert 1 <= cap <= batch
+    # rounded to the multiple unless clamped by the batch itself
+    assert cap == batch or cap % 8 == 0
+    # never under-provisions the design point's expected hard count
+    assert cap >= min(batch, int(np.ceil(p * batch)))
