@@ -10,11 +10,23 @@ ratios (both servers run on the same host, so the ratio survives runner
 variance), bitwise-parity booleans, and per-bench ok flags — rather than
 absolute samples/sec, which CI runner churn would make flaky. Each metric
 is a dotted path into the payload's ``benches`` map with a baseline value
-and a relative tolerance (default 25%: the gate fails when a
-higher-is-better metric drops more than ``tolerance * baseline``, or a
-lower-is-better one grows by the same margin; booleans must match
-exactly). Absolute wall seconds ride along in the diff artifact for the
-perf trajectory but are untracked.
+and per-metric tolerances (noise is per-metric: latency percentiles swing
+far more than speedup ratios, so one global threshold either flaps or
+masks regressions). A numeric metric spec supports:
+
+  * ``tolerance`` — relative slack (default 25%): fail when a
+    higher-is-better metric drops more than ``tolerance * baseline``, or a
+    lower-is-better one grows by the same margin;
+  * ``abs_tolerance`` — absolute slack in the metric's own units; the
+    allowed band is ``max(tolerance * |baseline|, abs_tolerance)``
+    (rtol/atol composition — absolute slack keeps near-zero baselines from
+    flapping, relative slack keeps large ones meaningful);
+  * ``min`` / ``max`` — hard bounds enforced REGARDLESS of tolerances (a
+    contract floor like "goodput ratio >= 1.3x stays >= 1.3x" even when
+    the recorded baseline would tolerate lower).
+
+Booleans must match exactly. Absolute wall seconds ride along in the diff
+artifact for the perf trajectory but are untracked.
 
 Both files carry ``schema_version`` — a mismatch fails loudly instead of
 quietly diffing the wrong fields (regenerate the baseline via
@@ -77,18 +89,24 @@ def compare(current: dict, baseline: dict) -> dict:
             report["ok"] &= got == want
         else:
             tol = float(spec.get("tolerance", default_tol))
+            slack = max(tol * abs(want), float(spec.get("abs_tolerance",
+                                                        0.0)))
             lower_is_better = spec.get("direction", "higher") == "lower"
-            # negated >=/<= so a NaN measurement FAILS the gate instead of
-            # slipping through every < / > comparison as False
+            # tolerance bounds the regression direction only; hard min/max
+            # clamp BOTH directions regardless of direction or slack
+            lo = want + slack if lower_is_better else want - slack
+            hi = float("inf")
             if lower_is_better:
-                floor_or_cap = want * (1.0 + tol)
-                bad = not (got <= floor_or_cap)
-                entry["delta"] = (got - want) / want if want else 0.0
-            else:
-                floor_or_cap = want * (1.0 - tol)
-                bad = not (got >= floor_or_cap)
-                entry["delta"] = (got - want) / want if want else 0.0
-            entry["bound"] = floor_or_cap
+                lo, hi = float("-inf"), lo
+            if "min" in spec:
+                lo = max(lo, float(spec["min"]))
+            if "max" in spec:
+                hi = min(hi, float(spec["max"]))
+            # negated comparison so a NaN measurement FAILS the gate
+            # instead of slipping through every < / > comparison as False
+            bad = not (lo <= got <= hi)
+            entry["delta"] = (got - want) / want if want else 0.0
+            entry["bound_low"], entry["bound_high"] = lo, hi
             entry["status"] = "REGRESSION" if bad else "ok"
             report["ok"] &= not bad
         report["metrics"][path] = entry

@@ -1,0 +1,237 @@
+"""Open-loop decode serving: sync (static batch formation) vs continuous
+(slot-based) scheduling under Poisson arrivals.
+
+The ``sync`` policy is the step-synchronous ``DecodeServer`` behind static
+batch formation (``SyncScheduler``): requests are admitted in arrival order
+into batches of ``n_slots``, and every batch runs in lockstep to its
+*longest* request — finished samples ride along, and stage 1 waits for the
+ring to drain each step. The ``continuous`` policy
+(``runtime.scheduler.ContinuousScheduler``) keeps a fixed slot pool with
+per-slot step counters: easy samples keep decoding through stage 1 while
+hard tokens wait in the ring for bucketed stage-2 dispatch, and completed
+slots are backfilled from the admission queue immediately. Variable
+per-request generation lengths make the lockstep waste visible — the
+classic continuous-batching win, realized here *on top of* the two-stage
+early-exit machinery.
+
+Per q in {0.1, 0.3, 0.5} (C_thr calibrated on the first decode step's
+exit-head confidences, bucket capacity ceil(q * n_slots)):
+
+  * token-stream equivalence is enforced BEFORE timing: every sample id's
+    continuous greedy stream must be identical to ``HostLoopDecoder``'s
+    (the sync policy inherits bitwise parity from ``DecodeServer``) —
+    the continuous correctness contract (same tokens per sample, any
+    interleaving);
+  * goodput = emitted tokens per second of scheduler-clock makespan, and
+    the tracked ``goodput_ratio`` = continuous / sync on the SAME machine
+    and request trace (machine-robust, gated >= 1.3x at q = 0.3 by
+    ``benchmarks/compare.py``);
+  * per-request submit->finish latency percentiles (p50/p90/p99) from
+    ``ServeStats`` ride in the JSON envelope (noisier than the ratio, so
+    untracked by the gate — see the per-metric tolerance machinery).
+
+When >= 2 devices are visible (CI pins 8 host devices), q = 0.3 also runs
+the continuous scheduler STAGE-DISAGGREGATED (pool + stage 1 on one
+submesh; ring, stage-2 cache store and bucketed vector-step dispatches on
+the other) and enforces the same per-sample token equivalence.
+
+Run via ``PYTHONPATH=src python -m benchmarks.run --only serve_continuous
+[--json]``.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import table
+from benchmarks.serve_pipeline import make_disagg_placement
+from repro.core import early_exit as ee
+from repro.models.config import ArchConfig
+from repro.runtime import serve_loop as SL
+from repro.runtime.scheduler import Request, poisson_arrivals
+
+Q_GRID = (0.1, 0.3, 0.5)
+ARRIVAL_RATE = 2000.0      # req/s: saturating on any CPU host (interarrival
+                           # far below a decode tick), so goodput measures
+                           # scheduling, not the arrival process
+
+
+def _bench_cfg() -> ArchConfig:
+    """Small enough that scheduling overhead (the thing under test) is a
+    visible share of the step period on CPU; the model compute itself is
+    identical between the two policies."""
+    return ArchConfig(
+        name="serve-cont-bench", family="dense", n_layers=4, d_model=32,
+        n_heads=4, n_kv_heads=2, d_ff=64, vocab=256,
+        dtype="float32", param_dtype="float32", tie_embeddings=True,
+    )
+
+
+def _make_requests(prompts: np.ndarray, n_tokens: np.ndarray,
+                   rate: float, seed: int) -> List[Request]:
+    arrivals = poisson_arrivals(len(prompts), rate, seed)
+    return [Request(sample_id=i, prompt=prompts[i], n_tokens=int(n_tokens[i]),
+                    arrival_time=float(arrivals[i]))
+            for i in range(len(prompts))]
+
+
+def _one_pass(make_sched, reqs: List[Request]):
+    """One open-loop pass on a fresh scheduler (its clock starts at pass
+    start); returns (goodput tok/s, stats)."""
+    sched = make_sched()
+    for r in reqs:
+        sched.submit(r)
+    results = sched.run()
+    makespan = sched.clock.now()
+    return sum(len(v) for v in results.values()) / makespan, sched.stats
+
+
+def _run_policies(make_sync, make_cont, reqs: List[Request], iters: int):
+    """One warmup pass each (compiles), then ``iters`` PAIRED timed passes:
+    sync and continuous run back to back within each pair, so slowly-varying
+    runner drift (shared CI boxes) hits both sides of a pair equally. The
+    tracked ratio is the MEDIAN of per-pair ratios — unbiased under
+    symmetric contention noise (a burst can land on either side of a pair)
+    and robust to outlier windows, unlike best-of or the mean; the reported
+    tok/s are each policy's best pass."""
+    _one_pass(make_sync, reqs)
+    _one_pass(make_cont, reqs)
+    best = {"sync": (0.0, None), "cont": (0.0, None)}
+    ratios = []
+    for _ in range(iters):
+        pair = {}
+        for key, mk in (("sync", make_sync), ("cont", make_cont)):
+            tps, stats = _one_pass(mk, reqs)
+            pair[key] = tps
+            if tps > best[key][0]:
+                best[key] = (tps, stats)
+        ratios.append(pair["cont"] / pair["sync"])
+    return best["sync"], best["cont"], float(np.median(ratios))
+
+
+def run(fast: bool = False, chips1: Optional[int] = None,
+        chips2: Optional[int] = None,
+        arrival_rate: float = ARRIVAL_RATE) -> dict:
+    # long-tailed generation lengths — the realistic serving regime and the
+    # canonical continuous-batching motivation: a static batch runs in
+    # lockstep to its longest member, so the tail length sets the whole
+    # batch's wall time while most slots sit finished
+    seq = 8
+    if fast:
+        n_requests, n_slots, tok_choices = 24, 8, (3, 4, 6, 24)
+    else:
+        n_requests, n_slots, tok_choices = 48, 16, (6, 8, 12, 40)
+    max_tok = max(tok_choices)
+    max_len = seq + max_tok
+    cfg = _bench_cfg()
+    spec0 = ee.EarlyExitSpec(exit_layer=2, c_thr=0.5)
+    params = ee.init_ee_params(jax.random.PRNGKey(0), cfg, spec0)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (n_requests, seq), 0, cfg.vocab))
+    n_tokens = np.random.default_rng(7).choice(tok_choices, size=n_requests)
+    conf = SL.decode_step0_confidences(params, cfg, spec0, prompts[:n_slots],
+                                       max_len=max_len)
+    fns = SL.decode_stage_fns(params, cfg, spec0)
+
+    n_dev = jax.device_count()
+    rows, data = [], {}
+    all_equiv = True
+    dis_checked, dis_equiv = False, True
+    for q in Q_GRID:
+        c_thr = float(jnp.quantile(conf, q))
+        capacity = max(2, int(np.ceil(q * n_slots)))
+        sc = SL.ServeConfig(capacity=capacity, queue_depth=4, c_thr=c_thr)
+        reqs = _make_requests(prompts, n_tokens, arrival_rate, seed=11)
+
+        # --- correctness gate BEFORE timing: per-sample token equivalence
+        # against the host-loop oracle (sync inherits bitwise parity from
+        # DecodeServer, checked in serve_decode)
+        oracle = SL.HostLoopDecoder(fns, sc).generate(prompts, max_tok)
+        cont = SL.ContinuousScheduler(fns, sc, n_slots=n_slots,
+                                      max_len=max_len)
+        for r in reqs:
+            cont.submit(r)
+        res = cont.run()
+        equiv = all(
+            [int(x) for x in oracle["tokens"][i][:int(n_tokens[i])]] == res[i]
+            for i in range(n_requests))
+        assert equiv, f"continuous token-stream equivalence broke at q={q}"
+        all_equiv &= equiv
+
+        # --- disaggregated equivalence (q = 0.3 keeps the bench bounded)
+        if q == 0.3:
+            placement = make_disagg_placement(q, chips1, chips2)
+            if placement is not None:
+                dis_checked = True
+                spec = ee.EarlyExitSpec(exit_layer=spec0.exit_layer,
+                                        c_thr=c_thr)
+                dsched = SL.build_continuous_scheduler(
+                    params, cfg, spec, sc, n_slots=n_slots, max_len=max_len,
+                    placement=placement)
+                for r in _make_requests(prompts, n_tokens, arrival_rate, 11):
+                    dsched.submit(r)
+                dres = dsched.run()
+                dis_equiv = all(
+                    [int(x) for x in oracle["tokens"][i][:int(n_tokens[i])]]
+                    == dres[i] for i in range(n_requests))
+                assert dis_equiv, \
+                    f"disaggregated continuous equivalence broke at q={q}"
+
+        # --- timed open-loop runs (warmup passes amortize compiles).
+        # Fast mode deliberately runs MORE pairs than full mode: it is the
+        # CI-gated configuration (the q=0.3 median carries a hard 1.3x
+        # floor), so stabilizing its median on contended runners is worth
+        # the extra short passes; full-mode passes are ~4x longer, and 5
+        # pairs keep its runtime sane.
+        iters = 8 if fast else 5
+        ((sync_tps, sync_stats), (cont_tps, cont_stats),
+         ratio) = _run_policies(
+            lambda: SL.SyncScheduler(SL.DecodeServer(fns, sc), n_slots),
+            lambda: SL.ContinuousScheduler(fns, sc, n_slots=n_slots,
+                                           max_len=max_len),
+            reqs, iters)
+        rows.append([f"{q:.1f}", f"{cont_stats.realized_q:.2f}", capacity,
+                     f"{sync_tps:,.0f}", f"{cont_tps:,.0f}",
+                     f"{ratio:.2f}x",
+                     f"{sync_stats.latency_p99 * 1e3:,.0f}",
+                     f"{cont_stats.latency_p99 * 1e3:,.0f}", equiv])
+        data[f"q{q}"] = {
+            "sync_goodput": sync_tps, "continuous_goodput": cont_tps,
+            "goodput_ratio": ratio, "equivalence": bool(equiv),
+            "realized_q": cont_stats.realized_q,
+            "sync_latency_p50": sync_stats.latency_p50,
+            "sync_latency_p90": sync_stats.latency_p90,
+            "sync_latency_p99": sync_stats.latency_p99,
+            "continuous_latency_p50": cont_stats.latency_p50,
+            "continuous_latency_p90": cont_stats.latency_p90,
+            "continuous_latency_p99": cont_stats.latency_p99,
+        }
+
+    data["disagg"] = {"devices": n_dev, "checked": dis_checked,
+                      "equivalence": bool(dis_equiv)}
+    txt = table(
+        "Continuous-batching decode: sync vs slot-scheduled "
+        f"(N={n_requests}, slots={n_slots}, prompt={seq}, "
+        f"T∈{tok_choices}, λ={arrival_rate:g}/s, "
+        f"backend={jax.default_backend()}, devices={n_dev})",
+        ["q", "realized q", "bucket C", "sync tok/s", "cont tok/s",
+         "goodput", "sync p99 ms", "cont p99 ms", "streams =="], rows)
+    return {"text": txt, **data}
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--arrival-rate", type=float, default=ARRIVAL_RATE)
+    ap.add_argument("--chips1", type=int, default=None,
+                    help="stage-1 submesh size (default: plan-derived)")
+    ap.add_argument("--chips2", type=int, default=None,
+                    help="stage-2 submesh size (default: plan-derived)")
+    a = ap.parse_args()
+    print(run(fast=a.fast, chips1=a.chips1, chips2=a.chips2,
+              arrival_rate=a.arrival_rate)["text"])

@@ -6,11 +6,24 @@ server (stage 1 full rate, stage 2 bucketed at capacity = ceil((p+slack)·B),
 hard samples carried between batches in the device ring buffer) and pushes
 batched requests with a controlled hard-fraction q.
 
-``--mode decode`` builds the decode-time ``DecodeServer``: full-depth
-prefill of the prompts, then per-token two-stage decode where hard tokens'
-hidden rows + stage-2 KV-cache segment rows travel the pytree ring into
-bucketed stage-2 dispatches. Reports decode tokens/s + per-token stats —
-the runtime half of the ATHEENA pipeline in both regimes.
+``--mode decode`` serves open-loop decode requests (Poisson arrivals at
+``--arrival-rate``, default: all at t=0) under a scheduling policy:
+
+  * ``--scheduler sync`` (default): static batch formation over the
+    step-synchronous ``DecodeServer`` — full-depth prefill per batch, then
+    per-token two-stage decode in lockstep, hard tokens' hidden rows +
+    stage-2 KV-cache segment rows through the pytree ring into bucketed
+    stage-2 dispatches;
+  * ``--scheduler continuous``: the slot-based ``ContinuousScheduler``
+    (``runtime/scheduler.py``) — a fixed pool of ``--batch`` decode slots
+    with per-slot step counters, backfilled from the admission queue; easy
+    samples keep decoding through stage 1 while hard tokens wait in the
+    ring for bucketed stage-2 dispatch. Trades the sync policy's bitwise
+    batch parity for utilization; per-sample token streams stay identical.
+
+Reports goodput (decode tokens/s), per-request latency percentiles and
+per-token stats — the runtime half of the ATHEENA pipeline in both
+regimes.
 
 ``--disaggregate`` places the two stages on disjoint submeshes (the paper's
 §IV spatial apportionment): stage 1 + the exit kernels on the first chips1
@@ -34,6 +47,7 @@ from repro.launch.mesh import stage_submeshes
 from repro.launch.shardings import stage_io_shardable
 from repro.models.registry import get_arch, get_smoke, list_archs
 from repro.runtime import serve_loop as SL
+from repro.runtime.scheduler import Request, poisson_arrivals
 from repro.runtime.stage_executor import StageExecutor, StagePlacement
 
 
@@ -54,6 +68,18 @@ def make_placement(p: float, batch: int, chips1: Optional[int] = None,
                       name="stage2"))
 
 
+def _summarized_stats(stats) -> dict:
+    """ServeStats.as_dict with the per-dispatch realized_q series reduced
+    to a summary (mean + tail) — one entry per pool tick is a drift-signal
+    feed, not a CLI report line."""
+    d = stats.as_dict()
+    series = d.pop("realized_q_series")
+    d["realized_q_series_mean"] = (float(np.mean(series)) if series
+                                   else 0.0)
+    d["realized_q_series_tail"] = series[-8:]
+    return d
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b", choices=list_archs())
@@ -66,6 +92,14 @@ def main(argv=None) -> int:
                     help="request length (prompt length in decode mode)")
     ap.add_argument("--decode-tokens", type=int, default=32,
                     help="tokens to generate per request (decode mode)")
+    ap.add_argument("--scheduler", default="sync",
+                    choices=("sync", "continuous"),
+                    help="decode scheduling policy: static batch formation "
+                         "over the step-synchronous server, or the "
+                         "slot-based continuous scheduler")
+    ap.add_argument("--arrival-rate", type=float, default=float("inf"),
+                    help="open-loop Poisson request rate (req/s) for decode "
+                         "mode; inf = all requests arrive at t=0")
     ap.add_argument("--p", type=float, default=0.25,
                     help="design-time hard probability (sizes stage 2)")
     ap.add_argument("--c-thr", type=float, default=0.9)
@@ -91,18 +125,34 @@ def main(argv=None) -> int:
         print(f"# {placement}")
 
     if args.mode == "decode":
-        server = SL.build_decode_server(params, cfg, spec, sc, placement)
         prompts = np.asarray(jax.random.randint(
-            jax.random.PRNGKey(1), (args.batch, args.seq), 0, cfg.vocab))
-        t0 = time.perf_counter()
-        out = server.generate(prompts, args.decode_tokens)
-        dt = time.perf_counter() - t0
-        assert out["tokens"].shape == (args.batch, args.decode_tokens)
-        n_decode = args.batch * (args.decode_tokens - 1)
+            jax.random.PRNGKey(1), (args.requests, args.seq), 0, cfg.vocab))
+        max_len = args.seq + args.decode_tokens
+        if args.scheduler == "continuous":
+            sched = SL.build_continuous_scheduler(
+                params, cfg, spec, sc, n_slots=args.batch, max_len=max_len,
+                placement=placement)
+        else:
+            sched = SL.build_sync_scheduler(params, cfg, spec, sc,
+                                            n_slots=args.batch,
+                                            placement=placement)
+        arrivals = poisson_arrivals(args.requests, args.arrival_rate, seed=2)
+        for i in range(args.requests):
+            sched.submit(Request(sample_id=i, prompt=prompts[i],
+                                 n_tokens=args.decode_tokens,
+                                 arrival_time=float(arrivals[i])))
+        results = sched.run()
+        makespan = sched.clock.now()
+        assert len(results) == args.requests
+        assert all(len(v) == args.decode_tokens for v in results.values())
+        n_tok = sum(len(v) for v in results.values())
+        stats = _summarized_stats(sched.stats)
         print(json.dumps({"arch": args.arch, "mode": "decode",
-                          "capacity": cap,
-                          "decode_tokens_per_s": n_decode / dt,
-                          **server.stats.as_dict()}, indent=1))
+                          "scheduler": args.scheduler, "capacity": cap,
+                          "n_slots": args.batch,
+                          "arrival_rate": args.arrival_rate,
+                          "goodput_tokens_per_s": n_tok / makespan,
+                          **stats}, indent=1, default=float))
         return 0
 
     server = SL.build_server(params, cfg, spec, sc, placement)
@@ -112,7 +162,7 @@ def main(argv=None) -> int:
     results = SL.serve_dataset(server, toks, batch=args.batch)
     dt = time.perf_counter() - t0
     assert len(results) == args.requests
-    stats = server.stats.as_dict()
+    stats = _summarized_stats(server.stats)
     print(json.dumps({"arch": args.arch, "mode": "prefill", "capacity": cap,
                       "throughput_samples_per_s": args.requests / dt,
                       **stats}, indent=1))

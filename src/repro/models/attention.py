@@ -180,39 +180,54 @@ def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, window: Optional[in
 def attention_decode(params, cfg: ArchConfig, x, cache, step, *,
                      window: Optional[int] = None):
     """One-token decode. x: (B, 1, d). cache: this layer's {k,v}.
-    step: scalar int32 — current absolute position. Returns (out, new_cache)."""
+    step: scalar int32 — current absolute position shared by the batch — or
+    a (B,) int32 vector of PER-ROW positions (continuous-batching decode,
+    where slots in one pool batch sit at different depths). The scalar path
+    is untouched (bitwise parity with the step-synchronous servers); the
+    vector path scatters each row's k/v at its own slot and masks each
+    row's attention span by its own length. Returns (out, new_cache)."""
     B = x.shape[0]
     H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
-    pos = jnp.full((B, 1), step, jnp.int32)
+    per_row = jnp.ndim(step) == 1
+    pos = step[:, None] if per_row else jnp.full((B, 1), step, jnp.int32)
     q, k, v = _project_qkv(params, cfg, x, pos)
     q = q[:, 0]                                    # (B, H, hd)
     L = cache["k"].shape[1]
     slot = (step % L) if window else step
-    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    if per_row:
+        rows = jnp.arange(B, dtype=jnp.int32)
+        k_cache = cache["k"].at[rows, slot].set(k[:, 0])
+        v_cache = cache["v"].at[rows, slot].set(v[:, 0])
+    else:
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
     if window:
-        # ring buffer: all L slots valid once step >= L; positions are implicit.
-        n_valid = jnp.minimum(step + 1, L)
-        # Reconstruct per-slot absolute positions for masking:
+        # ring buffer: all L slots valid once step >= L; positions are
+        # implicit. Reconstruct per-slot absolute positions for masking:
         # slot i holds position step - ((slot - i) mod L)
         idx = jnp.arange(L)
-        abs_pos = step - ((slot - idx) % L)
-        valid = (abs_pos >= 0) & (abs_pos <= step) & (abs_pos > step - L)
-        s_mask_len = jnp.where(valid, 1, 0)
-        del n_valid, s_mask_len
-        B_, Smax, KH_, D_ = k_cache.shape
+        if per_row:
+            abs_pos = step[:, None] - ((slot[:, None] - idx[None, :]) % L)
+            valid = ((abs_pos >= 0) & (abs_pos <= step[:, None])
+                     & (abs_pos > step[:, None] - L))       # (B, L)
+            vmask = valid[:, None, None, :]
+        else:
+            abs_pos = step - ((slot - idx) % L)
+            valid = (abs_pos >= 0) & (abs_pos <= step) & (abs_pos > step - L)
+            vmask = valid[None, None, None, :]
         G = H // KH
         qf = q.reshape(B, KH, G, hd).astype(jnp.float32)
         s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32)) / jnp.sqrt(
             jnp.array(hd, jnp.float32))
         if cfg.logit_softcap is not None:
             s = cfg.logit_softcap * jnp.tanh(s / cfg.logit_softcap)
-        s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+        s = jnp.where(vmask, s, -jnp.inf)
         p = jax.nn.softmax(s, axis=-1)
         out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
         out = out.reshape(B, H, hd).astype(x.dtype)
     else:
-        cache_len = jnp.full((B,), step + 1, jnp.int32)
+        cache_len = (step + 1 if per_row
+                     else jnp.full((B,), step + 1, jnp.int32))
         out = decode_attention(q, k_cache, v_cache, cache_len,
                                softcap=cfg.logit_softcap)
     out = jnp.einsum("be,ed->bd", out.reshape(B, -1), params["wo"])

@@ -94,17 +94,29 @@ def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int):
 
 
 def mla_decode(params, cfg: ArchConfig, x, cache, step):
-    """One-token MLA decode against the compressed cache."""
+    """One-token MLA decode against the compressed cache. ``step`` is the
+    scalar absolute position, or a (B,) int32 vector of per-row positions
+    (continuous-batching decode); the scalar path is untouched for bitwise
+    parity with the step-synchronous servers."""
     m = cfg.mla
     B = x.shape[0]
     H = cfg.n_heads
-    pos = jnp.full((B, 1), step, jnp.int32)
+    per_row = jnp.ndim(step) == 1
+    pos = step[:, None] if per_row else jnp.full((B, 1), step, jnp.int32)
     q_nope, q_rope, latent, k_rope = _mla_qkv(params, cfg, x, pos)
-    lat_cache = jax.lax.dynamic_update_slice(cache["latent"], latent, (0, step, 0))
-    kr_cache = jax.lax.dynamic_update_slice(cache["k_rope"], k_rope[:, :, 0, :],
-                                            (0, step, 0))
+    if per_row:
+        rows = jnp.arange(B, dtype=jnp.int32)
+        lat_cache = cache["latent"].at[rows, step].set(latent[:, 0])
+        kr_cache = cache["k_rope"].at[rows, step].set(k_rope[:, 0, 0, :])
+    else:
+        lat_cache = jax.lax.dynamic_update_slice(cache["latent"], latent,
+                                                 (0, step, 0))
+        kr_cache = jax.lax.dynamic_update_slice(cache["k_rope"],
+                                                k_rope[:, :, 0, :],
+                                                (0, step, 0))
     Smax = lat_cache.shape[1]
-    valid = jnp.arange(Smax) <= step                                # (Smax,)
+    valid = (jnp.arange(Smax)[None, :] <= step[:, None] if per_row
+             else jnp.arange(Smax) <= step)         # (B, Smax) | (Smax,)
     # score = q_nope·(W_uk latent) + q_rope·k_rope
     # absorb W_uk into q (the standard MLA decode trick): q_abs (B,H,r)
     w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
@@ -114,7 +126,8 @@ def mla_decode(params, cfg: ArchConfig, x, cache, step):
     s = s + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32),
                        kr_cache.astype(jnp.float32))
     s = s / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
-    s = jnp.where(valid[None, None, :], s, -jnp.inf)
+    s = jnp.where(valid[:, None, :] if per_row else valid[None, None, :],
+                  s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     # out = p · V = p · (W_uv latent); absorb W_uv on the way out
     ctx = jnp.einsum("bhs,bsr->bhr", p, lat_cache.astype(jnp.float32))

@@ -1,0 +1,906 @@
+"""Slot-based decode scheduling: continuous batching for two-stage
+early-exit serving.
+
+ATHEENA provisions stage 2 for the *fraction* of hard samples (paper §IV),
+but a step-synchronous decode server realizes that only within a step: every
+easy token waits for the ring to drain before the batch may advance, so
+stage 1 idles exactly when early exits should be paying off. This module
+makes per-sample progression asynchronous (HAPI-style staged progressive
+inference; cf. the Laskaridis et al. early-exit survey):
+
+  * ``ContinuousScheduler`` owns a fixed pool of decode **slots**. Each slot
+    holds one in-flight request with its own step counter (absolute cache
+    position), so one pooled stage-1 dispatch advances samples sitting at
+    *different* depths — the per-row ``step`` vector path in
+    ``models.attention``/``models.mla``. Slots whose token exits early keep
+    decoding through stage 1 on the next tick; slots whose token is hard are
+    **parked** and their hidden row + stage-2 cache rows + position ride the
+    pytree ring (payload lanes ``{"h", "cache", "step"}``) until a bucket
+    fills, the bucketed stage-2 dispatch scatters results back at each row's
+    own cache offset, and the slots resume. Completed slots are immediately
+    backfilled from an **admission queue** of open-loop (Poisson) arrivals.
+
+  * ``SyncScheduler`` is the degenerate policy: static batch formation over
+    a step-synchronous server's ``generate`` (``DecodeServer`` — which stays
+    bitwise-parity-checked against ``HostLoopDecoder``). It exists so both
+    policies share one request/latency bookkeeping and can be compared under
+    identical open-loop traffic (``benchmarks/serve_continuous.py``).
+
+**Correctness contract.** Continuous mode deliberately trades batch-level
+bitwise identity for utilization: merged logits are never materialized per
+step across the batch, and samples interleave arbitrarily. What is preserved
+— and enforced by ``tests/test_scheduler.py`` — is *per-sample token-stream
+equivalence*: every sample id's greedy token stream is identical to the one
+``HostLoopDecoder`` produces, in order, with no token dropped or duplicated.
+Per-row computations (RMSNorm, attention over the row's own cache span,
+row-wise matmuls) are batch-composition-independent, which is what makes the
+streams match even though the batches they were computed in never do.
+
+**Masked pooled stage 1.** The pool tick runs stage 1 on the full slot
+batch with a per-slot ``active`` mask: free/parked rows compute garbage that
+is discarded, and their caches are re-selected to the pre-tick state
+(``_seg_select``) so recurrent state (mamba2/rglru) advances exactly once
+per *consumed* token and attention rows re-write their slot when they
+resume. This keeps every tick a fixed-shape jitted program — no recompiles
+as slots churn.
+
+The device-side pytree ring (``ring_init``/``ring_enqueue``/``ring_drain``)
+and the chunked-enqueue/backpressure plumbing (``RingQueue``) live here and
+are shared with the step-synchronous servers in ``runtime/serve_loop.py``
+(which re-exports them; the paper's Fig. 7 sizing/deadlock story is
+unchanged). ``ServeStats`` also lives here: it now records per-request
+submit→finish latency (``latency_p50/p90/p99``) and a per-dispatch
+``realized_q`` series — the drift signal threshold re-planning consumes.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dispatch
+from repro.runtime.stage_executor import StagePlacement
+
+
+@dataclass
+class ServeConfig:
+    capacity: int                   # stage-2 bucket size (ceil(p*B) rounded)
+    queue_depth: int = 4            # buckets the buffer can hold
+    c_thr: float = 0.9
+    max_pending: int = 16           # pending device result groups (stage-1
+                                    # batches + stage-2 buckets) before the
+                                    # oldest are harvested to host, bounding
+                                    # device memory on long-running streams
+
+
+# bounded history so long-running streams keep O(1)-ish stats memory: the
+# latency reservoir covers the percentile window, the q series the recent
+# drift window (the re-planning signal cares about *persistent* drift)
+_SERIES_CAP = 65536
+
+
+@dataclass
+class ServeStats:
+    """Serving counters. ``n_samples`` counts distinct samples admitted;
+    ``n_decisions`` counts exit decisions — equal for prefill (one decision
+    per sample), ``n_samples * generated_tokens`` for decode. ``realized_q``
+    is therefore per-decision, which is the quantity the stage-2 bucket is
+    provisioned against in both regimes.
+
+    Per-stage occupancy (the TAP apportionment feedback signal): a stage-1
+    "cycle" is either a real dispatch (one batch/step/tick) or a forced-drain
+    stall — a cycle spent waiting on stage 2 because the ring was full
+    (every server counts ``n_stalls`` per forced drain, so one batch under
+    heavy backpressure can stall several times). ``stage1_occupancy`` is
+    the fraction of cycles doing stage-1 work; q > p pushes it below 1,
+    the paper's Fig. 4 lower band. Stage 2's slots are its bucket lanes —
+    ``stage2_occupancy`` is the fraction carrying real hard samples
+    rather than flush padding (q < p pushes it below 1: bucket bubbles).
+    ``stage1_chips``/``stage2_chips`` record the submesh sizes the serving
+    placement apportioned (1/1 for single-device).
+
+    Open-loop request tracking: ``record_submit``/``record_finish`` stamp
+    per-request wall time; ``latency_p50/p90/p99`` summarize the (bounded)
+    reservoir. ``realized_q_series`` keeps the per-dispatch hard fraction —
+    the drift signal online threshold re-planning consumes (a persistent
+    q > p trend means C_thr or the stage mesh needs re-planning)."""
+    n_samples: int = 0
+    n_decisions: int = 0
+    n_exited: int = 0
+    n_stage2: int = 0
+    n_stalls: int = 0
+    n_stage1_batches: int = 0       # stage-1 dispatches (batches / ticks)
+    n_buckets: int = 0              # running aggregate, O(1) memory
+    bucket_fill_sum: float = 0.0
+    stage1_chips: int = 1
+    stage2_chips: int = 1
+    # per-request latency + per-dispatch q (bounded deques, not lists: the
+    # bucket-fill aggregate stays O(1); these keep a capped history window)
+    submit_times: Dict[int, float] = field(default_factory=dict, repr=False)
+    latencies: Deque[float] = field(
+        default_factory=lambda: deque(maxlen=_SERIES_CAP), repr=False)
+    realized_q_series: Deque[float] = field(
+        default_factory=lambda: deque(maxlen=_SERIES_CAP), repr=False)
+
+    def record_decisions(self, n: int, n_hard: int) -> None:
+        self.n_stage1_batches += 1
+        self.n_decisions += n
+        self.n_exited += n - n_hard
+        self.realized_q_series.append(n_hard / n if n else 0.0)
+
+    def record_bucket(self, fill: float) -> None:
+        self.n_buckets += 1
+        self.bucket_fill_sum += fill
+
+    def record_placement(self, placement) -> None:
+        self.stage1_chips = placement.ex1.n_devices
+        self.stage2_chips = placement.ex2.n_devices
+
+    def record_submit(self, sample_id: int, t: float) -> None:
+        self.submit_times[sample_id] = t
+
+    def record_finish(self, sample_id: int, t: float) -> None:
+        """Submit→finish wall latency; unmatched finishes are ignored so
+        servers that never recorded submits (closed-loop tests) stay
+        latency-free rather than wrong."""
+        t0 = self.submit_times.pop(sample_id, None)
+        if t0 is not None:
+            self.latencies.append(t - t0)
+
+    def _latency_pct(self, pct: float) -> float:
+        if not self.latencies:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latencies), pct))
+
+    @property
+    def latency_p50(self) -> float:
+        return self._latency_pct(50.0)
+
+    @property
+    def latency_p90(self) -> float:
+        return self._latency_pct(90.0)
+
+    @property
+    def latency_p99(self) -> float:
+        return self._latency_pct(99.0)
+
+    @property
+    def n_finished(self) -> int:
+        return len(self.latencies)
+
+    @property
+    def mean_bucket_fill(self) -> float:
+        return self.bucket_fill_sum / self.n_buckets if self.n_buckets else 0.0
+
+    @property
+    def stage1_occupancy(self) -> float:
+        total = self.n_stage1_batches + self.n_stalls
+        return self.n_stage1_batches / total if total else 0.0
+
+    @property
+    def stage2_occupancy(self) -> float:
+        # buckets share one capacity, so the mean fill IS the slot occupancy
+        return self.mean_bucket_fill
+
+    @property
+    def realized_q(self) -> float:
+        return self.n_stage2 / max(self.n_decisions, 1)
+
+    @property
+    def decisions_per_sample(self) -> float:
+        return self.n_decisions / max(self.n_samples, 1)
+
+    def as_dict(self):
+        return {"n_samples": self.n_samples, "n_decisions": self.n_decisions,
+                "n_exited": self.n_exited, "n_stage2": self.n_stage2,
+                "n_stalls": self.n_stalls, "realized_q": self.realized_q,
+                "decisions_per_sample": self.decisions_per_sample,
+                "mean_bucket_fill": self.mean_bucket_fill,
+                "stage1_chips": self.stage1_chips,
+                "stage2_chips": self.stage2_chips,
+                "stage1_occupancy": self.stage1_occupancy,
+                "stage2_occupancy": self.stage2_occupancy,
+                "n_finished": self.n_finished,
+                "latency_p50": self.latency_p50,
+                "latency_p90": self.latency_p90,
+                "latency_p99": self.latency_p99,
+                "realized_q_series": list(self.realized_q_series)}
+
+
+# ---------------------------------------------------------------------------
+# device-side ring buffer over a pytree payload: per-leaf (size, *row) slabs
+# sharing one id lane + int32 cursors, updated in place (donated) by jitted
+# steps. Decode payloads add per-row "step" lanes (the row's absolute cache
+# position) so stage-2 results scatter back at the right offsets.
+# ---------------------------------------------------------------------------
+
+def ring_init(size: int, row, dtype=None) -> dict:
+    """Allocate the ring. ``row`` is either a bare shape tuple with ``dtype``
+    (single-slab convenience, payload = one array) or a pytree whose leaves
+    carry ``.shape``/``.dtype`` per-row (arrays or ShapeDtypeStructs).
+    Returns {'data' pytree of (size, *row_leaf), 'ids' (size,), 'head' (),
+    'count' ()} — ids slots are -1 (the paper's unused Sample ID)."""
+    if dtype is not None:
+        row = jax.ShapeDtypeStruct(tuple(row), dtype)
+    data = jax.tree.map(
+        lambda r: jnp.zeros((size,) + tuple(r.shape), r.dtype), row)
+    return {
+        "data": data,
+        "ids": jnp.full((size,), -1, jnp.int32),
+        "head": jnp.zeros((), jnp.int32),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _ring_enqueue_range(buf: dict, slab, slab_ids, lo, hi) -> dict:
+    """Append slab rows [lo, min(hi, n_valid)) at the ring's tail, where
+    n_valid is the compacted slab's valid prefix (ids >= 0). ``slab`` is a
+    pytree matching buf['data'] rows (every leaf (n, *row_leaf)). The donated
+    buffer is updated in place; unselected rows scatter out of bounds and
+    are dropped. The caller guarantees the selected range fits."""
+    size = buf["ids"].shape[0]
+    n = slab_ids.shape[0]
+    n_valid = jnp.sum(slab_ids >= 0).astype(jnp.int32)
+    upper = jnp.minimum(hi, n_valid)
+    lanes = jnp.arange(n, dtype=jnp.int32)
+    sel = (lanes >= lo) & (lanes < upper)
+    idx = (buf["head"] + buf["count"] + lanes - lo) % size
+    idx = jnp.where(sel, idx, size)                  # OOB -> dropped
+    return {
+        "data": jax.tree.map(lambda d, s: d.at[idx].set(s, mode="drop"),
+                             buf["data"], slab),
+        "ids": buf["ids"].at[idx].set(slab_ids, mode="drop"),
+        "head": buf["head"],
+        "count": buf["count"] + jnp.maximum(upper - lo, 0),
+    }
+
+
+def ring_enqueue(buf: dict, slab, slab_ids: jnp.ndarray) -> dict:
+    """Append the whole valid prefix of a compacted slab pytree (ids >= 0)
+    at the ring's tail; see ``_ring_enqueue_range``."""
+    return _ring_enqueue_range(buf, slab, slab_ids, 0, slab_ids.shape[0])
+
+
+@functools.partial(jax.jit, donate_argnums=(0,), static_argnames=("capacity",))
+def ring_drain(buf: dict, capacity: int):
+    """Pop up to ``capacity`` samples from the ring's head into a stage-2
+    bucket. Returns (buf, bucket pytree of (capacity, *row_leaf),
+    bucket_ids (capacity,)) — slots past the take carry id -1 (flush) and
+    whatever stale rows the ring holds (stage 2 is row-independent, flush
+    rows are discarded by the exit merge)."""
+    size = buf["ids"].shape[0]
+    take_n = jnp.minimum(buf["count"], capacity).astype(jnp.int32)
+    lanes = jnp.arange(capacity, dtype=jnp.int32)
+    idx = (buf["head"] + lanes) % size
+    valid = lanes < take_n
+    bucket = jax.tree.map(lambda d: jnp.take(d, idx, axis=0), buf["data"])
+    bucket_ids = jnp.where(valid, jnp.take(buf["ids"], idx), -1)
+    new = {
+        "data": buf["data"],
+        "ids": buf["ids"].at[jnp.where(valid, idx, size)].set(
+            -1, mode="drop"),
+        "head": (buf["head"] + take_n) % size,
+        "count": buf["count"] - take_n,
+    }
+    return new, bucket, bucket_ids
+
+
+class RingQueue:
+    """Chunked-enqueue/bucket-pop plumbing over the device ring: the one
+    hard-token queue implementation the step-synchronous servers
+    (``runtime/serve_loop.py``) and the continuous scheduler share.
+
+    ``enqueue`` appends ``n_hard`` valid rows of a compacted slab pytree in
+    chunks, calling ``drain_one`` (pop a bucket + dispatch stage 2) whenever
+    the ring is out of space — so a batch hairier than the whole ring still
+    serves, it just backpressures stage 1 harder (paper Fig. 7). Full
+    buckets drain first by construction (count == size when stalled).
+
+    The slab arrives from stage 1; placing it onto ``ex`` IS the stage
+    boundary hop — under a disaggregated placement that is a device-to-
+    device ``jax.device_put`` across submesh shardings, and the ring itself
+    is resident on stage 2's submesh."""
+
+    def __init__(self, sc: ServeConfig, ex, stats: ServeStats):
+        self.sc = sc
+        self.ex = ex                      # the ring + stage 2 live here
+        self.stats = stats
+        self.size = sc.queue_depth * sc.capacity
+        self._buf: Optional[dict] = None
+        self.count = 0                    # host mirror of buf['count']
+
+    def reset(self) -> None:
+        self._buf, self.count = None, 0
+
+    def enqueue(self, slab_tree, slab_ids, n_hard: int,
+                drain_one: Callable[[], None]) -> None:
+        slab_tree = self.ex.place_io(slab_tree)
+        slab_ids = self.ex.place_io(slab_ids)
+        if self._buf is None:
+            spec = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                slab_tree)
+            self._buf = self.ex.place_io(ring_init(self.size, spec))
+        off = 0
+        while off < n_hard:
+            free = self.size - self.count
+            if free == 0:
+                self.stats.n_stalls += 1
+                drain_one()
+                continue
+            take = min(free, n_hard - off)
+            self._buf = _ring_enqueue_range(self._buf, slab_tree, slab_ids,
+                                            off, off + take)
+            self.count += take
+            off += take
+
+    def pop(self):
+        """Pop up to ``capacity`` rows; returns (bucket pytree, ids,
+        n_taken) or None when the ring is empty — n_taken is authoritative
+        for callers mirroring the FIFO host-side. Updates occupancy
+        stats."""
+        take = min(self.count, self.sc.capacity)
+        if take == 0:
+            return None
+        self._buf, bucket, bucket_ids = ring_drain(self._buf,
+                                                   self.sc.capacity)
+        self.count -= take
+        self.stats.n_stage2 += take
+        self.stats.record_bucket(take / self.sc.capacity)
+        return bucket, bucket_ids, take
+
+
+# ---------------------------------------------------------------------------
+# sample-major row helpers (shared with serve_loop): gather rows into a
+# compacted slab / scatter updated bucket rows back into the store
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _gather_rows(rows, ids):
+    """Gather sample-major rows by compacted slab ids (-1 flush slots read
+    row 0; their content is never used — flush ids drop on enqueue)."""
+    take = jnp.maximum(ids, 0)
+    return jax.tree.map(lambda m: jnp.take(m, take, axis=0), rows)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_rows(rows, bucket_rows, ids):
+    """Scatter updated bucket cache rows back into the sample-major store;
+    flush ids (-1) scatter out of bounds and are dropped. Donated: the
+    store is updated in place."""
+    b = jax.tree.leaves(rows)[0].shape[0]
+    safe = jnp.where(ids >= 0, ids, b)
+    return jax.tree.map(lambda m, r: m.at[safe].set(r, mode="drop"),
+                        rows, bucket_rows)
+
+
+# ---------------------------------------------------------------------------
+# open-loop request plumbing: arrivals, clocks
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Request:
+    """One decode request in the admission queue. ``arrival_time`` is in the
+    scheduler clock's time base (seconds); a request is admissible once the
+    clock passes it — submit everything up front to replay a trace."""
+    sample_id: int
+    prompt: np.ndarray          # (S,) int32
+    n_tokens: int               # total tokens to emit (incl. prefill token)
+    arrival_time: float = 0.0
+
+
+class Clock:
+    """Wall clock with fast-forward: ``now`` is seconds since construction
+    plus all skipped idle time, so an idle server jumps to the next arrival
+    instead of sleeping, while *service* time stays real wall time. Both
+    policies measure latency in this one time base."""
+
+    def __init__(self):
+        self._t0 = time.perf_counter()
+        self._skip = 0.0
+
+    def now(self) -> float:
+        return time.perf_counter() - self._t0 + self._skip
+
+    def advance_to(self, t: float) -> None:
+        gap = t - self.now()
+        if gap > 0:
+            self._skip += gap
+
+
+class LogicalClock:
+    """Deterministic clock for property tests: only ``advance_to`` moves it."""
+
+    def __init__(self, t: float = 0.0):
+        self._t = t
+
+    def now(self) -> float:
+        return self._t
+
+    def advance_to(self, t: float) -> None:
+        self._t = max(self._t, t)
+
+
+# ---------------------------------------------------------------------------
+# pooled segment-cache helpers. A segment cache (ee.split_caches output /
+# run_layers layout) is {'first': [per-layer pytrees, batch axis 0],
+# 'blocks': leaves with batch axis 1 (leading superblock axis), 'rem':
+# [batch axis 0]}. The slot pool holds one such tree of width n_slots and
+# admits/ticks rows in place.
+# ---------------------------------------------------------------------------
+
+def _seg_map2(f_ax0, f_ax1, a, b):
+    return {"first": jax.tree.map(f_ax0, a["first"], b["first"]),
+            "blocks": jax.tree.map(f_ax1, a["blocks"], b["blocks"]),
+            "rem": jax.tree.map(f_ax0, a["rem"], b["rem"])}
+
+
+def seg_pool_like(seg, n_slots: int):
+    """A zeroed slot-pool segment cache shaped like ``seg`` (batch 1) but
+    ``n_slots`` wide."""
+    def ax0(x):
+        return jnp.zeros((n_slots,) + x.shape[1:], x.dtype)
+
+    def ax1(x):
+        return jnp.zeros(x.shape[:1] + (n_slots,) + x.shape[2:], x.dtype)
+
+    return {"first": jax.tree.map(ax0, seg["first"]),
+            "blocks": jax.tree.map(ax1, seg["blocks"]),
+            "rem": jax.tree.map(ax0, seg["rem"])}
+
+
+def _seg_select(active, new, old):
+    """Per-slot cache select: keep ``new`` where the slot was active this
+    tick, ``old`` otherwise — parked/free rows' garbage compute is discarded
+    and recurrent state advances exactly once per consumed token."""
+    def sel(axis):
+        def f(n, o):
+            shape = [1] * n.ndim
+            shape[axis] = n.shape[axis]
+            return jnp.where(active.reshape(shape), n, o)
+        return f
+
+    return _seg_map2(sel(0), sel(1), new, old)
+
+
+# ---------------------------------------------------------------------------
+# jitted pool-tick / lane-update steps (module level: the jit cache is keyed
+# on the stage callables, so fresh scheduler instances over the same
+# DecodeFns reuse compiled programs)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, donate_argnums=(1,),
+                   static_argnames=("s1", "backend"))
+def _pool_tick(tok, c1, pos, active, start, budget, c_thr, *, s1, backend):
+    """One continuous tick over the whole slot pool: masked stage 1 at
+    per-slot positions, fused exit decision + compaction, easy-token
+    advance. The active mask is device-resident — easy rows stay active
+    until their token budget is spent (``pos - start + 1`` counts emitted
+    tokens), hard rows deactivate (parked) — so a tick needs no host
+    uploads at all. Returns everything the host needs to park/emit/enqueue:
+    (new_c1, hard slab, slab slot ids, slab steps, n_hard, easy mask,
+    hard mask, emitted tokens, new tok lane, new pos lane, new active)."""
+    h, nc1, exit_logits = s1(tok, c1, pos)
+    nc1 = _seg_select(active, nc1, c1)
+    exit_mask, _, _ = dispatch.exit_decision_op(exit_logits, c_thr,
+                                                backend=backend)
+    easy = active & exit_mask
+    hard = active & ~exit_mask
+    n = tok.shape[0]
+    slab, src, n_hard = dispatch.gather_compact_op(h, hard, n,
+                                                   backend=backend)
+    slab_slots = src                          # slot index IS the ring id
+    slab_steps = jnp.where(src >= 0, jnp.take(pos, jnp.maximum(src, 0)), 0)
+    emit_tok = jnp.argmax(exit_logits, axis=-1).astype(jnp.int32)
+    new_tok = jnp.where(easy[:, None], emit_tok[:, None], tok)
+    new_pos = pos + easy.astype(jnp.int32)
+    new_active = easy & (new_pos - start + 1 < budget)
+    return (nc1, slab, slab_slots, slab_steps, n_hard, easy, hard, emit_tok,
+            new_tok, new_pos, new_active)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4, 5))
+def _admit_stage1(c1_pool, tok, pos, active, start, budget, logits0, c1_rows,
+                  slots, position, budgets):
+    """One-dispatch stage-1 side of a chunked admission: greedy first tokens
+    from the chunk's prefill logits (k, V), the chunk's stage-1 cache rows
+    into their slots' pool rows, and the slots' lanes (next token, position,
+    per-request token budget; active iff the budget leaves decode tokens).
+    ``slots`` is the (k,) slot-index vector; ``position`` the shared prompt
+    length. Donated pools; returns the first tokens (k,) on device (one
+    host sync per chunk, not per request)."""
+    tok0 = jnp.argmax(logits0, axis=-1).astype(jnp.int32)      # (k,)
+
+    def ax0(p, s):
+        return p.at[slots].set(s.astype(p.dtype))
+
+    def ax1(p, s):
+        return p.at[:, slots].set(s.astype(p.dtype))
+
+    return (_seg_map2(ax0, ax1, c1_pool, c1_rows),
+            tok.at[slots, 0].set(tok0), pos.at[slots].set(position),
+            active.at[slots].set(budgets > 1),
+            start.at[slots].set(position), budget.at[slots].set(budgets),
+            tok0)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def _unpark_lanes(tok, pos, active, start, budget, ids, s2_tok):
+    """Apply a stage-2 bucket to the lanes: each valid id's next token is
+    the bucket's greedy token, its position advances past the consumed one,
+    and it re-activates unless its token budget is now spent (flush ids -1
+    drop)."""
+    n = tok.shape[0]
+    safe = jnp.where(ids >= 0, ids, n)
+    tok = tok.at[safe].set(s2_tok[:, None], mode="drop")
+    pos = pos.at[safe].add(1, mode="drop")
+    live = jnp.take(pos, safe, mode="clip") - jnp.take(start, safe,
+                                                       mode="clip") + 1 \
+        < jnp.take(budget, safe, mode="clip")
+    active = active.at[safe].set(live, mode="drop")
+    return tok, pos, active
+
+
+@jax.jit
+def _greedy_row(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# the continuous slot scheduler
+# ---------------------------------------------------------------------------
+
+_FREE, _ACTIVE, _PARKED = 0, 1, 2
+
+
+class ContinuousScheduler:
+    """Continuous-batching two-stage EE decode over a fixed slot pool.
+
+    ``fns`` is a ``runtime.serve_loop.DecodeFns`` (duck-typed: anything with
+    ``prefill``/``split``/``s1_raw``/``s2`` works — property tests drive the
+    policy with toy stage callables). All admitted requests must satisfy
+    ``len(prompt) + n_tokens <= max_len`` (the pool's shared cache width).
+
+    Under a disaggregated ``placement`` the slot lanes, pooled stage-1 cache
+    and the pool tick live on ``ex1``; the stage-2 row store, the ring and
+    the bucketed vector-step ``stage2_decode`` dispatches on ``ex2``. The
+    hard slab + step lane hop ex1 -> ex2 at enqueue and each bucket's greedy
+    tokens hop ex2 -> ex1 at unpark — ``jax.device_put`` transfers, never
+    the host.
+
+    ``results`` maps sample id -> list of emitted greedy tokens (stream
+    order). Latency is recorded per request in ``stats``.
+    """
+
+    def __init__(self, fns, sc: ServeConfig, *, n_slots: int, max_len: int,
+                 placement: Optional[StagePlacement] = None, clock=None,
+                 eager_drain_below: Optional[int] = None):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.fns = fns
+        self.sc = sc
+        self.n_slots = n_slots
+        self.max_len = max_len
+        # starvation-aware dispatch: a pool tick costs the same whether 2 or
+        # n_slots rows are active, so once the ACTIVE count dips below this
+        # threshold a partial bucket is worth its flush padding — stage-2
+        # bubbles are cheaper than stage-1 ticks over a starved pool. The
+        # default (bucket capacity) keeps at least a bucket's worth of slots
+        # decoding; 0 recovers pure full-bucket dispatch (maximum fill,
+        # maximum parking latency).
+        self.eager_drain_below = (sc.capacity if eager_drain_below is None
+                                  else eager_drain_below)
+        self.placement = placement or StagePlacement.single_device()
+        self.ex1, self.ex2 = self.placement.ex1, self.placement.ex2
+        self.clock = clock or Clock()
+        self.stats = ServeStats()
+        self.stats.record_placement(self.placement)
+        self.ring = RingQueue(sc, self.ex2, self.stats)
+        self.queue: Deque[Request] = deque()
+        self._queued: set = set()            # sids awaiting admission
+        self.results: Dict[int, List[int]] = {}
+        # host-side slot metadata
+        self._sid = [-1] * n_slots
+        self._emitted = [0] * n_slots
+        self._budget = [0] * n_slots
+        self._state = [_FREE] * n_slots
+        self._free: List[int] = list(range(n_slots - 1, -1, -1))
+        self.peak_busy = 0
+        # parked slots in ring order (the compaction is contractually
+        # stable, so ascending slot order per tick IS enqueue order) — lets
+        # bucket results be harvested lazily: state transitions happen at
+        # dispatch, token values land under a bounded pending window
+        self._parked_fifo: Deque[int] = deque()
+        self._pending: Deque = deque()
+        # device-side pool state (lazy: shapes come from the first
+        # admission); lanes: next token, position, active/start/budget
+        self._c1 = None
+        self._rows = None
+        self._tok = None
+        self._pos = None
+        self._active_lane = None
+        self._start_lane = None
+        self._budget_lane = None
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        """Queue one request (arrival order = queue order; arrival_time
+        gates admissibility against the scheduler clock). Validation
+        happens HERE so a malformed request is rejected before it can
+        damage in-flight state mid-admission."""
+        if req.n_tokens < 1:
+            raise ValueError(f"n_tokens must be >= 1, got {req.n_tokens}")
+        if len(req.prompt) + req.n_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.sample_id}: S + n_tokens = "
+                f"{len(req.prompt) + req.n_tokens} exceeds pool max_len "
+                f"{self.max_len}")
+        if req.sample_id in self.results or req.sample_id in self._queued:
+            raise ValueError(f"duplicate sample id {req.sample_id}")
+        self._queued.add(req.sample_id)
+        self.queue.append(req)
+
+    def _ensure_pool(self, c1_row, rows_row) -> None:
+        if self._c1 is not None:
+            return
+        self._c1 = seg_pool_like(c1_row, self.n_slots)
+        self._rows = self.ex2.place_io(
+            jax.tree.map(lambda x: jnp.zeros((self.n_slots,) + x.shape[1:],
+                                             x.dtype), rows_row))
+        self._tok = self.ex1.place_io(jnp.zeros((self.n_slots, 1), jnp.int32))
+        self._pos = self.ex1.place_io(jnp.zeros((self.n_slots,), jnp.int32))
+        self._active_lane = self.ex1.place_io(jnp.zeros((self.n_slots,),
+                                                        bool))
+        self._start_lane = self.ex1.place_io(jnp.zeros((self.n_slots,),
+                                                       jnp.int32))
+        self._budget_lane = self.ex1.place_io(jnp.zeros((self.n_slots,),
+                                                        jnp.int32))
+
+    def _admit_chunk(self, reqs: List[Request]) -> None:
+        """Admit a chunk of requests sharing one prompt length with ONE
+        batched prefill + one fused pool write — per-request admission cost
+        is the classic continuous-batching tax, and chunking it is what
+        keeps backfill from serializing the pipeline."""
+        prompts = np.stack([np.asarray(r.prompt, np.int32) for r in reqs])
+        S = prompts.shape[1]
+        for r in reqs:
+            self._queued.discard(r.sample_id)
+            self.stats.n_samples += 1
+            self.stats.record_submit(r.sample_id, r.arrival_time)
+        logits0, caches = self.fns.prefill(
+            self.ex1.place_io(jnp.asarray(prompts)), self.max_len)
+        c1_rows, rows_rows = self.fns.split(caches)
+        self._ensure_pool(c1_rows, rows_rows)
+        slots = [self._free.pop() for _ in reqs]
+        slots_dev = jnp.asarray(slots, jnp.int32)
+        budgets = jnp.asarray([r.n_tokens for r in reqs], jnp.int32)
+        (self._c1, self._tok, self._pos, self._active_lane,
+         self._start_lane, self._budget_lane, tok0) = _admit_stage1(
+            self._c1, self._tok, self._pos, self._active_lane,
+            self._start_lane, self._budget_lane, logits0, c1_rows,
+            self.ex1.place_io(slots_dev), S, self.ex1.place_io(budgets))
+        self._rows = _scatter_rows(self._rows, self.ex2.place_io(rows_rows),
+                                   self.ex2.place_io(slots_dev))
+        tok0_np = np.asarray(tok0)           # one admission sync per chunk
+        for j, (r, slot) in enumerate(zip(reqs, slots)):
+            self.results[r.sample_id] = [int(tok0_np[j])]
+            self._sid[slot] = r.sample_id
+            self._emitted[slot] = 1
+            self._budget[slot] = r.n_tokens
+            self._state[slot] = _ACTIVE
+            if r.n_tokens == 1:              # prefill-only: free right away
+                self._finish_slot(slot)
+        self.peak_busy = max(self.peak_busy, self.n_slots - len(self._free))
+
+    def _try_admit(self) -> None:
+        """Admit admissible requests in arrival order, chunked to power-of-2
+        batch sizes (bounded set of prefill shapes -> bounded compiles). A
+        chunk is a same-prompt-length prefix of the admissible run."""
+        while self._free and self.queue:
+            now = self.clock.now()
+            n_adm = 0
+            S0 = len(self.queue[0].prompt)
+            for r in self.queue:
+                if (r.arrival_time > now or len(r.prompt) != S0
+                        or n_adm >= len(self._free)):
+                    break
+                n_adm += 1
+            if n_adm == 0:
+                return
+            k = 1 << (n_adm.bit_length() - 1)     # largest power of 2 <= n
+            self._admit_chunk([self.queue.popleft() for _ in range(k)])
+
+    # -- emission / completion ----------------------------------------------
+
+    def _finish_slot(self, slot: int) -> None:
+        """Free a slot whose request just emitted its last token and stamp
+        the request's finish time."""
+        sid = self._sid[slot]
+        self._state[slot] = _FREE
+        self._sid[slot] = -1
+        self._free.append(slot)
+        self.stats.record_finish(sid, self.clock.now())
+
+    def _advance_slot(self, slot: int) -> None:
+        """One token emitted for this slot: finish when the budget is
+        spent, else back to ACTIVE — the one completion rule both the easy
+        (tick) and hard (bucket) paths share."""
+        self._emitted[slot] += 1
+        if self._emitted[slot] >= self._budget[slot]:
+            self._finish_slot(slot)
+        else:
+            self._state[slot] = _ACTIVE
+
+    def _emit(self, slot: int, token: int) -> None:
+        self.results[self._sid[slot]].append(token)
+        self._advance_slot(slot)
+
+    # -- stage 2 dispatch ----------------------------------------------------
+
+    def _dispatch_bucket(self) -> None:
+        popped = self.ring.pop()
+        if popped is None:
+            return
+        bucket, ids, take = popped
+        logits, new_rows = self.fns.s2(bucket["h"], bucket["cache"],
+                                       bucket["step"])
+        self._rows = _scatter_rows(self._rows, new_rows, ids)
+        toks = _greedy_row(logits)
+        # ex2 -> ex1 hop: greedy tokens come home to the slot lanes
+        self._tok, self._pos, self._active_lane = _unpark_lanes(
+            self._tok, self._pos, self._active_lane, self._start_lane,
+            self._budget_lane, self.ex1.place_io(ids),
+            self.ex1.place_io(toks))
+        # host state transitions AND finish stamps NOW (the popped slots
+        # are the FIFO head — no device sync needed; the next tick's sync
+        # forces this bucket's compute within one window, so dispatch-time
+        # stamps match the easy path's tick-time stamps); token VALUES land
+        # at harvest, bounded by max_pending like the sync servers'
+        # backlogs
+        entries = []
+        for _ in range(take):
+            slot = self._parked_fifo.popleft()
+            sid = self._sid[slot]
+            entries.append((sid, len(self.results[sid])))
+            self.results[sid].append(None)       # filled at harvest
+            self._advance_slot(slot)
+        self._pending.append((entries, toks))
+        while len(self._pending) > self.sc.max_pending:
+            self._harvest_one()
+
+    def _harvest_one(self) -> None:
+        entries, toks = self._pending.popleft()
+        toks_np = np.asarray(toks)
+        for j, (sid, idx) in enumerate(entries):
+            self.results[sid][idx] = int(toks_np[j])
+
+    # -- the tick ------------------------------------------------------------
+
+    def _tick(self) -> None:
+        (self._c1, slab, slots, steps, n_hard_dev, easy, hard, emit_tok,
+         self._tok, self._pos, self._active_lane) = _pool_tick(
+            self._tok, self._c1, self._pos, self._active_lane,
+            self._start_lane, self._budget_lane, self.sc.c_thr,
+            s1=self.fns.s1_raw, backend=dispatch.kernel_backend())
+        # the one per-tick host sync: n_hard (control flow) + the easy/hard
+        # masks and emitted tokens (results), fetched together
+        n_hard, easy_np, hard_np, emit_np = jax.device_get(
+            (n_hard_dev, easy, hard, emit_tok))
+        n_hard = int(n_hard)
+        self.stats.record_decisions(int(easy_np.sum()) + n_hard, n_hard)
+        for i in np.nonzero(easy_np)[0]:
+            self._emit(int(i), int(emit_np[i]))
+        if n_hard > 0:
+            for i in np.nonzero(hard_np)[0]:     # ascending = slab order
+                self._state[int(i)] = _PARKED
+                self._parked_fifo.append(int(i))
+            # ex1 -> ex2 hop: the id lane crosses first (the cache gather
+            # runs ON ex2 — the store never leaves stage 2's submesh); the
+            # hidden slab + step lane cross inside the enqueue's place_io
+            slots2 = self.ex2.place_io(slots)
+            cache_slab = _gather_rows(self._rows, slots2)
+            self.ring.enqueue({"h": slab, "cache": cache_slab,
+                               "step": steps}, slots2, n_hard,
+                              self._dispatch_bucket)
+
+    # -- the loop ------------------------------------------------------------
+
+    def _n_state(self, state: int) -> int:
+        return sum(1 for s in self._state if s == state)
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drive the pool until the queue and every slot drain. Easy slots
+        advance every tick; full buckets dispatch eagerly; partial buckets
+        only when nothing else can make progress (all busy slots parked) —
+        the HAPI-style staged policy."""
+        while True:
+            self._try_admit()
+            if self._n_state(_ACTIVE) > 0:
+                self._tick()
+                while self.ring.count >= self.sc.capacity:
+                    self._dispatch_bucket()
+                # starved pool: partial buckets beat idle stage-1 width
+                while (self.ring.count > 0
+                       and self._n_state(_ACTIVE) < self.eager_drain_below):
+                    self._dispatch_bucket()
+            elif self.ring.count > 0:
+                self._dispatch_bucket()      # forced partial: all parked
+            elif self.queue:
+                if not self._free:           # full pool, all parked, empty
+                    raise AssertionError("scheduler wedged: parked slots "
+                                         "with an empty ring")
+                self.clock.advance_to(self.queue[0].arrival_time)
+            else:
+                break
+        while self._pending:                 # final harvest: fill the
+            self._harvest_one()              # deferred token values
+        assert self._n_state(_FREE) == self.n_slots, \
+            "scheduler drained with busy slots"
+        return self.results
+
+
+# ---------------------------------------------------------------------------
+# the degenerate sync policy: static batch formation over a step-synchronous
+# server's generate()
+# ---------------------------------------------------------------------------
+
+class SyncScheduler:
+    """Batch-formation wrapper over a step-synchronous decode server
+    (``DecodeServer`` or ``HostLoopDecoder``): admit requests in arrival
+    order into static batches of ``n_slots``, wait for the batch's last
+    arrival, run ``generate`` to the batch's *longest* request (lockstep:
+    finished samples ride along until the whole batch completes — the
+    utilization gap continuous batching removes), truncate per request.
+    Prompts within a batch must share one length. A partial tail batch
+    runs at its own (smaller) shape — one extra compile, but the stats
+    (realized q, decisions, occupancy) count only real traffic, never
+    padding rows."""
+
+    def __init__(self, server, n_slots: int, clock=None):
+        self.server = server
+        self.n_slots = n_slots
+        self.clock = clock or Clock()
+        self.queue: Deque[Request] = deque()
+        self.results: Dict[int, List[int]] = {}
+
+    @property
+    def stats(self) -> ServeStats:
+        return self.server.stats
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self) -> Dict[int, List[int]]:
+        while self.queue:
+            batch = [self.queue.popleft()
+                     for _ in range(min(self.n_slots, len(self.queue)))]
+            self.clock.advance_to(max(r.arrival_time for r in batch))
+            for r in batch:
+                self.stats.record_submit(r.sample_id, r.arrival_time)
+            prompts = [np.asarray(r.prompt, np.int32) for r in batch]
+            n_max = max(r.n_tokens for r in batch)
+            out = self.server.generate(np.stack(prompts), n_max)
+            t = self.clock.now()
+            for i, r in enumerate(batch):
+                self.results[r.sample_id] = [
+                    int(x) for x in out["tokens"][i, :r.n_tokens]]
+                self.stats.record_finish(r.sample_id, t)
+        return self.results
+
+
+def poisson_arrivals(n: int, rate: float, seed: int = 0) -> np.ndarray:
+    """Cumulative Poisson-process arrival times for ``n`` requests at
+    ``rate`` (requests/second); ``rate`` <= 0 or inf means all at t=0."""
+    if not np.isfinite(rate) or rate <= 0:
+        return np.zeros(n)
+    gaps = np.random.default_rng(seed).exponential(1.0 / rate, size=n)
+    return np.cumsum(gaps)

@@ -74,14 +74,22 @@ serving is the same hot loop, bit for bit — parity the disaggregation tests
 enforce under ``--xla_force_host_platform_device_count``.
 
 The runtime tracks realized q *per decision* (= per sample for prefill, per
-token for decode) and reports per-stage occupancy/stall statistics so a
-deployment can re-plan (``core.stage_mesh``) when drift is persistent.
+token for decode) and reports per-stage occupancy/stall statistics plus
+per-request latency so a deployment can re-plan (``core.stage_mesh``) when
+drift is persistent.
+
+**Continuous batching.** The step-synchronous servers here are the ``sync``
+scheduling policy. ``runtime/scheduler.py`` owns the slot-based
+``ContinuousScheduler`` (per-slot step counters, admission queue, HAPI-style
+staged dispatch) that trades this file's bitwise batch parity for
+utilization; the ring primitives, ``RingQueue`` backpressure plumbing,
+``ServeConfig`` and ``ServeStats`` live there and are re-exported here so
+the two policies share one implementation.
 """
 from __future__ import annotations
 
 import functools
 from collections import deque
-from dataclasses import dataclass
 from typing import Callable, List, NamedTuple, Optional, Tuple
 
 import numpy as np
@@ -95,172 +103,12 @@ from repro.kernels import dispatch
 from repro.models import transformer as T
 from repro.models.config import ArchConfig
 from repro.runtime.stage_executor import StagePlacement
-
-
-@dataclass
-class ServeConfig:
-    capacity: int                   # stage-2 bucket size (ceil(p*B) rounded)
-    queue_depth: int = 4            # buckets the buffer can hold
-    c_thr: float = 0.9
-    max_pending: int = 16           # pending device result groups (stage-1
-                                    # batches + stage-2 buckets) before the
-                                    # oldest are harvested to host, bounding
-                                    # device memory on long-running streams
-
-
-@dataclass
-class ServeStats:
-    """Serving counters. ``n_samples`` counts distinct samples admitted;
-    ``n_decisions`` counts exit decisions — equal for prefill (one decision
-    per sample), ``n_samples * generated_tokens`` for decode. ``realized_q``
-    is therefore per-decision, which is the quantity the stage-2 bucket is
-    provisioned against in both regimes.
-
-    Per-stage occupancy (the TAP apportionment feedback signal): a stage-1
-    "cycle" is either a real dispatch (one batch/step) or a forced-drain
-    stall — a cycle spent waiting on stage 2 because the ring was full
-    (every server counts ``n_stalls`` per forced drain, so one batch under
-    heavy backpressure can stall several times). ``stage1_occupancy`` is
-    the fraction of cycles doing stage-1 work; q > p pushes it below 1,
-    the paper's Fig. 4 lower band. Stage 2's slots are its bucket lanes —
-    ``stage2_occupancy`` is the fraction carrying real hard samples
-    rather than flush padding (q < p pushes it below 1: bucket bubbles).
-    ``stage1_chips``/``stage2_chips`` record the submesh sizes the serving
-    placement apportioned (1/1 for single-device)."""
-    n_samples: int = 0
-    n_decisions: int = 0
-    n_exited: int = 0
-    n_stage2: int = 0
-    n_stalls: int = 0
-    n_stage1_batches: int = 0       # stage-1 dispatches (batches / steps)
-    n_buckets: int = 0              # running aggregate, O(1) memory
-    bucket_fill_sum: float = 0.0
-    stage1_chips: int = 1
-    stage2_chips: int = 1
-
-    def record_decisions(self, n: int, n_hard: int) -> None:
-        self.n_stage1_batches += 1
-        self.n_decisions += n
-        self.n_exited += n - n_hard
-
-    def record_bucket(self, fill: float) -> None:
-        self.n_buckets += 1
-        self.bucket_fill_sum += fill
-
-    def record_placement(self, placement: StagePlacement) -> None:
-        self.stage1_chips = placement.ex1.n_devices
-        self.stage2_chips = placement.ex2.n_devices
-
-    @property
-    def mean_bucket_fill(self) -> float:
-        return self.bucket_fill_sum / self.n_buckets if self.n_buckets else 0.0
-
-    @property
-    def stage1_occupancy(self) -> float:
-        total = self.n_stage1_batches + self.n_stalls
-        return self.n_stage1_batches / total if total else 0.0
-
-    @property
-    def stage2_occupancy(self) -> float:
-        # buckets share one capacity, so the mean fill IS the slot occupancy
-        return self.mean_bucket_fill
-
-    @property
-    def realized_q(self) -> float:
-        return self.n_stage2 / max(self.n_decisions, 1)
-
-    @property
-    def decisions_per_sample(self) -> float:
-        return self.n_decisions / max(self.n_samples, 1)
-
-    def as_dict(self):
-        return {"n_samples": self.n_samples, "n_decisions": self.n_decisions,
-                "n_exited": self.n_exited, "n_stage2": self.n_stage2,
-                "n_stalls": self.n_stalls, "realized_q": self.realized_q,
-                "decisions_per_sample": self.decisions_per_sample,
-                "mean_bucket_fill": self.mean_bucket_fill,
-                "stage1_chips": self.stage1_chips,
-                "stage2_chips": self.stage2_chips,
-                "stage1_occupancy": self.stage1_occupancy,
-                "stage2_occupancy": self.stage2_occupancy}
-
-
-# ---------------------------------------------------------------------------
-# device-side ring buffer over a pytree payload: per-leaf (size, *row) slabs
-# sharing one id lane + int32 cursors, updated in place (donated) by jitted
-# steps
-# ---------------------------------------------------------------------------
-
-def ring_init(size: int, row, dtype=None) -> dict:
-    """Allocate the ring. ``row`` is either a bare shape tuple with ``dtype``
-    (single-slab convenience, payload = one array) or a pytree whose leaves
-    carry ``.shape``/``.dtype`` per-row (arrays or ShapeDtypeStructs).
-    Returns {'data' pytree of (size, *row_leaf), 'ids' (size,), 'head' (),
-    'count' ()} — ids slots are -1 (the paper's unused Sample ID)."""
-    if dtype is not None:
-        row = jax.ShapeDtypeStruct(tuple(row), dtype)
-    data = jax.tree.map(
-        lambda r: jnp.zeros((size,) + tuple(r.shape), r.dtype), row)
-    return {
-        "data": data,
-        "ids": jnp.full((size,), -1, jnp.int32),
-        "head": jnp.zeros((), jnp.int32),
-        "count": jnp.zeros((), jnp.int32),
-    }
-
-
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _ring_enqueue_range(buf: dict, slab, slab_ids, lo, hi) -> dict:
-    """Append slab rows [lo, min(hi, n_valid)) at the ring's tail, where
-    n_valid is the compacted slab's valid prefix (ids >= 0). ``slab`` is a
-    pytree matching buf['data'] rows (every leaf (n, *row_leaf)). The donated
-    buffer is updated in place; unselected rows scatter out of bounds and
-    are dropped. The caller guarantees the selected range fits."""
-    size = buf["ids"].shape[0]
-    n = slab_ids.shape[0]
-    n_valid = jnp.sum(slab_ids >= 0).astype(jnp.int32)
-    upper = jnp.minimum(hi, n_valid)
-    lanes = jnp.arange(n, dtype=jnp.int32)
-    sel = (lanes >= lo) & (lanes < upper)
-    idx = (buf["head"] + buf["count"] + lanes - lo) % size
-    idx = jnp.where(sel, idx, size)                  # OOB -> dropped
-    return {
-        "data": jax.tree.map(lambda d, s: d.at[idx].set(s, mode="drop"),
-                             buf["data"], slab),
-        "ids": buf["ids"].at[idx].set(slab_ids, mode="drop"),
-        "head": buf["head"],
-        "count": buf["count"] + jnp.maximum(upper - lo, 0),
-    }
-
-
-def ring_enqueue(buf: dict, slab, slab_ids: jnp.ndarray) -> dict:
-    """Append the whole valid prefix of a compacted slab pytree (ids >= 0)
-    at the ring's tail; see ``_ring_enqueue_range``."""
-    return _ring_enqueue_range(buf, slab, slab_ids, 0, slab_ids.shape[0])
-
-
-@functools.partial(jax.jit, donate_argnums=(0,), static_argnames=("capacity",))
-def ring_drain(buf: dict, capacity: int):
-    """Pop up to ``capacity`` samples from the ring's head into a stage-2
-    bucket. Returns (buf, bucket pytree of (capacity, *row_leaf),
-    bucket_ids (capacity,)) — slots past the take carry id -1 (flush) and
-    whatever stale rows the ring holds (stage 2 is row-independent, flush
-    rows are discarded by the exit merge)."""
-    size = buf["ids"].shape[0]
-    take_n = jnp.minimum(buf["count"], capacity).astype(jnp.int32)
-    lanes = jnp.arange(capacity, dtype=jnp.int32)
-    idx = (buf["head"] + lanes) % size
-    valid = lanes < take_n
-    bucket = jax.tree.map(lambda d: jnp.take(d, idx, axis=0), buf["data"])
-    bucket_ids = jnp.where(valid, jnp.take(buf["ids"], idx), -1)
-    new = {
-        "data": buf["data"],
-        "ids": buf["ids"].at[jnp.where(valid, idx, size)].set(
-            -1, mode="drop"),
-        "head": (buf["head"] + take_n) % size,
-        "count": buf["count"] - take_n,
-    }
-    return new, bucket, bucket_ids
+# the scheduler module owns the shared serving substrate; re-exported names
+# keep this module the one import site for serving callers and tests
+from repro.runtime.scheduler import (  # noqa: F401  (re-exports)
+    ContinuousScheduler, Request, RingQueue, ServeConfig, ServeStats,
+    SyncScheduler, _gather_rows, _ring_enqueue_range, _scatter_rows,
+    ring_drain, ring_enqueue, ring_init)
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))
@@ -282,8 +130,9 @@ def _decide_compact(hidden, exit_logits, sample_ids, c_thr, *, backend):
 
 
 # ---------------------------------------------------------------------------
-# shared ring plumbing: chunked enqueue under backpressure + bucket pops —
-# the one ring implementation both the prefill and the decode server sit on
+# shared ring plumbing: the step-synchronous servers sit on the scheduler's
+# RingQueue (chunked enqueue under backpressure + bucket pops) — one ring
+# implementation for prefill, sync decode and continuous decode
 # ---------------------------------------------------------------------------
 
 class _RingedServer:
@@ -293,57 +142,30 @@ class _RingedServer:
         self.placement = placement or StagePlacement.single_device()
         self.ex1 = self.placement.ex1
         self.ex2 = self.placement.ex2    # the ring + stage 2 live here
-        self.size = sc.queue_depth * sc.capacity
         self.stats = ServeStats()
         self.stats.record_placement(self.placement)
-        self._buf: Optional[dict] = None
-        self._count = 0                   # host mirror of buf['count']
+        self.ring = RingQueue(sc, self.ex2, self.stats)
+
+    @property
+    def _count(self) -> int:             # host mirror of the ring count
+        return self.ring.count
 
     def _drain(self) -> None:             # pop one bucket + dispatch stage 2
         raise NotImplementedError
 
     def _enqueue_backpressured(self, slab_tree, slab_ids, n_hard: int) -> None:
         """Enqueue ``n_hard`` valid rows of a compacted slab pytree in
-        chunks, stalling (draining) whenever the ring is out of space — so
-        a batch hairier than the whole ring still serves, it just
-        backpressures stage 1 harder (Fig. 7 story). Full buckets drain
-        first by construction (count == size when stalled).
-
-        The slab arrives from stage 1; placing it onto ``ex2`` IS the
-        stage-boundary hop — under a disaggregated placement that is a
-        device-to-device ``jax.device_put`` across submesh shardings, and
-        the ring itself is resident on stage 2's submesh."""
-        slab_tree = self.ex2.place_io(slab_tree)
-        slab_ids = self.ex2.place_io(slab_ids)
-        if self._buf is None:
-            spec = jax.tree.map(
-                lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
-                slab_tree)
-            self._buf = self.ex2.place_io(ring_init(self.size, spec))
-        off = 0
-        while off < n_hard:
-            free = self.size - self._count
-            if free == 0:
-                self.stats.n_stalls += 1
-                self._drain()
-                continue
-            take = min(free, n_hard - off)
-            self._buf = _ring_enqueue_range(self._buf, slab_tree, slab_ids,
-                                            off, off + take)
-            self._count += take
-            off += take
+        chunks, stalling (draining) whenever the ring is out of space — see
+        ``scheduler.RingQueue.enqueue`` (the Fig. 7 backpressure story)."""
+        self.ring.enqueue(slab_tree, slab_ids, n_hard, self._drain)
 
     def _pop_bucket(self):
         """Pop up to ``capacity`` rows; returns (bucket pytree, ids) or
         None when the ring is empty. Updates occupancy stats."""
-        take = min(self._count, self.sc.capacity)
-        if take == 0:
+        popped = self.ring.pop()
+        if popped is None:
             return None
-        self._buf, bucket, bucket_ids = ring_drain(self._buf,
-                                                   self.sc.capacity)
-        self._count -= take
-        self.stats.n_stage2 += take
-        self.stats.record_bucket(take / self.sc.capacity)
+        bucket, bucket_ids, _ = popped
         return bucket, bucket_ids
 
 
@@ -561,25 +383,6 @@ def cache_of_rows(rows: dict) -> dict:
             "rem": rows["rem"]}
 
 
-@jax.jit
-def _gather_rows(rows, ids):
-    """Gather sample-major rows by compacted slab ids (-1 flush slots read
-    row 0; their content is never used — flush ids drop on enqueue)."""
-    take = jnp.maximum(ids, 0)
-    return jax.tree.map(lambda m: jnp.take(m, take, axis=0), rows)
-
-
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _scatter_rows(rows, bucket_rows, ids):
-    """Scatter updated bucket cache rows back into the sample-major store;
-    flush ids (-1) scatter out of bounds and are dropped. Donated: the
-    store is updated in place."""
-    b = jax.tree.leaves(rows)[0].shape[0]
-    safe = jnp.where(ids >= 0, ids, b)
-    return jax.tree.map(lambda m, r: m.at[safe].set(r, mode="drop"),
-                        rows, bucket_rows)
-
-
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _merge_bucket_logits(merged, ids, logits):
     """Exit Merge, one bucket at a time: overwrite hard samples' rows of
@@ -594,13 +397,19 @@ def _greedy_tokens(logits):
 
 
 class DecodeFns(NamedTuple):
-    """Jitted decode-stage callables shared by ``DecodeServer`` and the
-    host-loop baseline, so benchmark deltas are purely the exit machinery
-    and parity is bitwise."""
+    """Jitted decode-stage callables shared by ``DecodeServer``, the
+    host-loop baseline AND the continuous scheduler, so benchmark deltas are
+    purely the exit/scheduling machinery and parity is bitwise (sync) /
+    per-sample token-equivalent (continuous). ``step`` may be the scalar
+    batch position (sync) or a per-row (B,) vector (continuous pool).
+    ``s1_raw`` is the un-jitted stage-1 body: the continuous pool tick
+    inlines it inside its own jitted step (masked cache select around it),
+    which a donating jit wrapper would get in the way of."""
     prefill: Callable   # (tokens (B,S), max_len static) -> (logits, caches)
     split: Callable     # caches -> (stage1_caches, stage2_cache_rows)
     s1: Callable        # (tok (B,1), c1, step) -> (h (B,d), c1', exit_logits)
     s2: Callable        # (h (C,d), cache_rows, step) -> (logits, new_rows)
+    s1_raw: Callable    # s1's body, un-jitted (continuous pool tick)
 
 
 def decode_stage_fns(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
@@ -636,11 +445,12 @@ def decode_stage_fns(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
         c1, c2 = ee.split_caches(cfg, spec, caches)
         return c1, cache_rows_of(c2)
 
-    @functools.partial(jax.jit, donate_argnums=(1,))
-    def s1(tok, c1, step):
+    def s1_raw(tok, c1, step):
         h, nc1, exit_logits = ee.stage1_decode(p_full, cfg, spec, tok, c1,
                                                step)
         return h[:, 0], nc1, exit_logits
+
+    s1 = functools.partial(jax.jit, donate_argnums=(1,))(s1_raw)
 
     @functools.partial(jax.jit, donate_argnums=(1,))
     def s2(h_rows, cache_rows, step):
@@ -649,7 +459,7 @@ def decode_stage_fns(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
                                       presliced_params=presliced)
         return logits, cache_rows_of(nc)
 
-    return DecodeFns(pf, split, s1, s2)
+    return DecodeFns(pf, split, s1, s2, s1_raw)
 
 
 def decode_step0_confidences(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
@@ -757,7 +567,7 @@ class DecodeServer(_RingedServer):
         prompt = self.ex1.place_io(jnp.asarray(np.asarray(prompt, np.int32)))
         B, S = prompt.shape
         self.stats.n_samples += B
-        self._buf, self._count = None, 0     # fresh ring per stream shape
+        self.ring.reset()                    # fresh ring per stream shape
         self._ids = self.ex1.place_io(jnp.arange(B, dtype=jnp.int32))
         logits0, caches = self.fns.prefill(prompt, S + n_tokens)
         self._c1, rows = self.fns.split(caches)
@@ -911,6 +721,35 @@ def build_host_decoder(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
                        sc: ServeConfig) -> HostLoopDecoder:
     """The host-loop decode baseline (benchmark baseline / parity oracle)."""
     return HostLoopDecoder(decode_stage_fns(params, cfg, spec), sc)
+
+
+def build_continuous_scheduler(params, cfg: ArchConfig,
+                               spec: ee.EarlyExitSpec, sc: ServeConfig, *,
+                               n_slots: int, max_len: int,
+                               placement: Optional[StagePlacement] = None,
+                               clock=None) -> ContinuousScheduler:
+    """Continuous-batching decode scheduler over the EE model: a fixed pool
+    of ``n_slots`` decode slots backfilled from an admission queue, easy
+    slots advancing through stage 1 every tick while hard tokens wait in the
+    ring for bucketed stage-2 dispatch (``runtime/scheduler.py``).
+    ``max_len`` bounds every request's prompt + generation length (the
+    pool's shared cache width)."""
+    return ContinuousScheduler(decode_stage_fns(params, cfg, spec, placement),
+                               sc, n_slots=n_slots, max_len=max_len,
+                               placement=placement, clock=clock)
+
+
+def build_sync_scheduler(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
+                         sc: ServeConfig, *, n_slots: int,
+                         placement: Optional[StagePlacement] = None,
+                         clock=None) -> SyncScheduler:
+    """The degenerate ``sync`` policy under the same open-loop request
+    interface: static batch formation over the step-synchronous
+    ``DecodeServer`` (which stays bitwise-parity-checked against
+    ``HostLoopDecoder``)."""
+    return SyncScheduler(build_decode_server(params, cfg, spec, sc,
+                                             placement),
+                         n_slots, clock=clock)
 
 
 def serve_dataset(server, tokens: np.ndarray, batch: int) -> dict:
