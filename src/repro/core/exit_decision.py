@@ -23,6 +23,8 @@ from __future__ import annotations
 
 from typing import Tuple
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -75,6 +77,33 @@ def decision_and_argmax(logits: jnp.ndarray, c_thr: float
 def calibrate_threshold(confidences: jnp.ndarray, target_exit_rate: float) -> float:
     """Pick C_thr so that a ``target_exit_rate`` fraction of the profiling
     set exits early (paper: 'C_thr determined after training prior to exit
-    profiling'). confidences: (N,) stage-1 max-softmax values."""
-    q = jnp.quantile(confidences.astype(jnp.float32), 1.0 - target_exit_rate)
+    profiling'). confidences: (N,) stage-1 max-softmax values.
+
+    Called ONLINE by the drift controller on a rolling reservoir, so the
+    corners are pinned down rather than left to quantile semantics:
+
+      * an empty calibration set raises (a threshold from nothing would
+        silently steer the exit rate to garbage);
+      * ``target_exit_rate`` outside [0, 1] raises;
+      * rate 0 returns the max confidence — the exit test is STRICT
+        (``conf > C_thr``, the division-free ``c_thr * s < 1``), so
+        nothing in the set exits;
+      * rate 1 returns the largest float strictly below the min, so ties
+        AT the minimum still exit;
+      * ties at the quantile boundary under-exit rather than over-exit
+        (strict comparison sends boundary samples to stage 2 — the
+        conservative side: accuracy is preserved, throughput re-plans).
+    """
+    conf = jnp.asarray(confidences, jnp.float32).reshape(-1)
+    if conf.size == 0:
+        raise ValueError("calibrate_threshold needs a non-empty confidence "
+                         "set (the online reservoir has not filled yet?)")
+    if not 0.0 <= target_exit_rate <= 1.0:
+        raise ValueError(f"target_exit_rate must be in [0, 1], got "
+                         f"{target_exit_rate}")
+    if target_exit_rate <= 0.0:
+        return float(jnp.max(conf))
+    if target_exit_rate >= 1.0:
+        return float(np.nextafter(np.float32(jnp.min(conf)), np.float32(-1)))
+    q = jnp.quantile(conf, 1.0 - target_exit_rate)
     return float(q)

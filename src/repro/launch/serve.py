@@ -25,6 +25,16 @@ Reports goodput (decode tokens/s), per-request latency percentiles and
 per-token stats — the runtime half of the ATHEENA pipeline in both
 regimes.
 
+``--controller`` attaches the online drift control plane
+(``runtime/controller.py``) to the decode scheduler: when the EWMA of the
+realized hard rate q drifts persistently outside ``--controller-band``
+around the provisioned ``--p``, C_thr is re-solved online from the rolling
+confidence reservoir (and the scheduler's drain policy / live-slot cap
+adapt from latency+occupancy feedback); past the re-plan band the Eq. (1)
+stage re-plan is reported, and applied to the bucket capacity under
+``--controller-replan``. The controller's state machine report rides in
+the output JSON.
+
 ``--disaggregate`` places the two stages on disjoint submeshes (the paper's
 §IV spatial apportionment): stage 1 + the exit kernels on the first chips1
 devices, the ring + stage 2 on the next chips2, with ``--chips1/--chips2``
@@ -47,6 +57,7 @@ from repro.launch.mesh import stage_submeshes
 from repro.launch.shardings import stage_io_shardable
 from repro.models.registry import get_arch, get_smoke, list_archs
 from repro.runtime import serve_loop as SL
+from repro.runtime.controller import ControllerConfig, DriftController
 from repro.runtime.scheduler import Request, poisson_arrivals
 from repro.runtime.stage_executor import StageExecutor, StagePlacement
 
@@ -103,6 +114,24 @@ def main(argv=None) -> int:
     ap.add_argument("--p", type=float, default=0.25,
                     help="design-time hard probability (sizes stage 2)")
     ap.add_argument("--c-thr", type=float, default=0.9)
+    ap.add_argument("--controller", action="store_true",
+                    help="attach the online drift controller (decode "
+                         "mode): closed-loop C_thr re-calibration + "
+                         "scheduler autoscaling against the provisioned "
+                         "--p")
+    ap.add_argument("--controller-band", type=float, default=0.05,
+                    help="hysteresis band on |EWMA(q) - p| before the "
+                         "controller actuates")
+    ap.add_argument("--controller-cooldown", type=int, default=8,
+                    help="controller visits to hold after an actuation")
+    ap.add_argument("--controller-slo-p99", type=float, default=None,
+                    help="p99 latency SLO (s) for the autoscaler's "
+                         "live-slot occupancy cap (default: no cap "
+                         "control)")
+    ap.add_argument("--controller-replan", action="store_true",
+                    help="APPLY the stage re-plan's bucket-capacity half "
+                         "at discrete re-plan points (default: report "
+                         "only)")
     ap.add_argument("--disaggregate", action="store_true",
                     help="stage 1 / stage 2 on disjoint submeshes")
     ap.add_argument("--chips1", type=int, default=None,
@@ -136,6 +165,18 @@ def main(argv=None) -> int:
             sched = SL.build_sync_scheduler(params, cfg, spec, sc,
                                             n_slots=args.batch,
                                             placement=placement)
+        controller = None
+        if args.controller:
+            controller = DriftController(ControllerConfig(
+                provisioned_p=args.p, target_band=args.controller_band,
+                release_band=args.controller_band / 2,
+                # keep the escalation band valid (>= target) when the user
+                # widens the hysteresis band past the 0.15 default
+                replan_band=max(0.15, 3 * args.controller_band),
+                cooldown_ticks=args.controller_cooldown,
+                latency_slo_p99=args.controller_slo_p99,
+                apply_replan=args.controller_replan))
+            controller.attach(sched)
         arrivals = poisson_arrivals(args.requests, args.arrival_rate, seed=2)
         for i in range(args.requests):
             sched.submit(Request(sample_id=i, prompt=prompts[i],
@@ -147,12 +188,15 @@ def main(argv=None) -> int:
         assert all(len(v) == args.decode_tokens for v in results.values())
         n_tok = sum(len(v) for v in results.values())
         stats = _summarized_stats(sched.stats)
-        print(json.dumps({"arch": args.arch, "mode": "decode",
-                          "scheduler": args.scheduler, "capacity": cap,
-                          "n_slots": args.batch,
-                          "arrival_rate": args.arrival_rate,
-                          "goodput_tokens_per_s": n_tok / makespan,
-                          **stats}, indent=1, default=float))
+        payload = {"arch": args.arch, "mode": "decode",
+                   "scheduler": args.scheduler, "capacity": cap,
+                   "n_slots": args.batch,
+                   "arrival_rate": args.arrival_rate,
+                   "goodput_tokens_per_s": n_tok / makespan,
+                   **stats}
+        if controller is not None:
+            payload["controller"] = controller.state.as_dict()
+        print(json.dumps(payload, indent=1, default=float))
         return 0
 
     server = SL.build_server(params, cfg, spec, sc, placement)

@@ -1,1 +1,2 @@
-from repro.runtime import elastic, serve_loop, stage_executor, train_loop
+from repro.runtime import (controller, elastic, serve_loop, stage_executor,
+                           telemetry, train_loop)

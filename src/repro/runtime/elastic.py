@@ -1,10 +1,17 @@
-"""Elastic re-meshing: re-plan a deployment for a degraded device set.
+"""Elastic re-meshing: re-plan a deployment for a degraded device set or a
+drifted exit rate.
 
 When a node fails mid-serve, the stage-mesh apportionment is re-derived for
 the surviving chip count from the SAME TAP curves (no re-profiling) and the
 checkpoint restores onto the new mesh — param shardings are re-laid-out by
 jax.device_put under the new NamedSharding. The dry-run proves the degraded
 plan compiles (tests/test_elastic).
+
+``replan_rate`` is the drift analogue: same chips, but the Eq. (1)
+combination re-run at the OBSERVED hard rate q instead of the provisioned
+p — the stage re-planning actuator of the online drift control plane
+(``runtime/controller.py``), reached when realized q drifts beyond what
+threshold re-calibration alone can correct.
 """
 from __future__ import annotations
 
@@ -50,6 +57,26 @@ def replan(tap1: T.TAPFunction, tap2: T.TAPFunction, p: float,
         throughput_after=after.design_throughput)
 
 
+def replan_rate(tap1: T.TAPFunction, tap2: T.TAPFunction, p: float,
+                q: float, chips: int,
+                hbm_per_chip_gb: float = 16.0) -> ElasticPlan:
+    """Re-run the Eq. (1) combination at the OBSERVED hard rate ``q`` under
+    the same chip budget. ``throughput_before`` is what the p-provisioned
+    design actually sustains at q (the Fig. 4 off-design band),
+    ``throughput_after`` what the q-matched re-plan sustains — so
+    ``degradation`` > 1 reads as the throughput the re-plan recovers."""
+    before = T.combine(tap1, tap2, p, budget=(chips, chips * hbm_per_chip_gb))
+    after = T.combine(tap1, tap2, q, budget=(chips, chips * hbm_per_chip_gb))
+    if after is None:
+        raise RuntimeError(
+            f"no feasible design at q={q} under {chips} chips — shed load "
+            f"or shrink capacity")
+    return ElasticPlan(
+        chips_before=chips, chips_after=chips, design=after,
+        throughput_before=before.throughput_at(q) if before else 0.0,
+        throughput_after=after.throughput_at(q))
+
+
 def degrade_mesh(devices: Sequence, failed: Sequence[int],
                  plan: StageMeshPlan) -> Tuple[jax.sharding.Mesh, ...]:
     """Drop failed device indices and rebuild stage submeshes from the
@@ -59,5 +86,5 @@ def degrade_mesh(devices: Sequence, failed: Sequence[int],
 
 
 def relayout(tree, shardings):
-    """Move a checkpoph pytree onto a (new) sharding pytree."""
+    """Move a checkpoint pytree onto a (new) sharding pytree."""
     return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)

@@ -66,6 +66,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import dispatch
+from repro.runtime import telemetry
 from repro.runtime.stage_executor import StagePlacement
 
 
@@ -110,7 +111,13 @@ class ServeStats:
     per-request wall time; ``latency_p50/p90/p99`` summarize the (bounded)
     reservoir. ``realized_q_series`` keeps the per-dispatch hard fraction —
     the drift signal online threshold re-planning consumes (a persistent
-    q > p trend means C_thr or the stage mesh needs re-planning)."""
+    q > p trend means C_thr or the stage mesh needs re-planning).
+
+    Windowed drift view: ``realized_q_ewma`` is the EWMA of the recent q
+    series (``telemetry.ewma`` — the ONE definition the controller and the
+    drift benchmarks share) and ``q_drift`` its excursion from the
+    provisioned p (0.0 until a controller / caller sets
+    ``provisioned_p``). Both ride in ``as_dict``."""
     n_samples: int = 0
     n_decisions: int = 0
     n_exited: int = 0
@@ -118,6 +125,7 @@ class ServeStats:
     n_stalls: int = 0
     n_stage1_batches: int = 0       # stage-1 dispatches (batches / ticks)
     n_buckets: int = 0              # running aggregate, O(1) memory
+    provisioned_p: Optional[float] = None   # the rate the mesh was sized for
     bucket_fill_sum: float = 0.0
     stage1_chips: int = 1
     stage2_chips: int = 1
@@ -128,12 +136,20 @@ class ServeStats:
         default_factory=lambda: deque(maxlen=_SERIES_CAP), repr=False)
     realized_q_series: Deque[float] = field(
         default_factory=lambda: deque(maxlen=_SERIES_CAP), repr=False)
+    # the drift filter's window, kept as its own bounded deque so the
+    # per-tick EWMA folds O(window) recent entries instead of copying the
+    # full (up to _SERIES_CAP) series on every controller visit
+    _q_window: Deque[float] = field(
+        default_factory=lambda: deque(maxlen=telemetry.DRIFT_WINDOW),
+        repr=False)
 
     def record_decisions(self, n: int, n_hard: int) -> None:
         self.n_stage1_batches += 1
         self.n_decisions += n
         self.n_exited += n - n_hard
-        self.realized_q_series.append(n_hard / n if n else 0.0)
+        q = n_hard / n if n else 0.0
+        self.realized_q_series.append(q)
+        self._q_window.append(q)
 
     def record_bucket(self, fill: float) -> None:
         self.n_buckets += 1
@@ -194,6 +210,22 @@ class ServeStats:
         return self.n_stage2 / max(self.n_decisions, 1)
 
     @property
+    def realized_q_ewma(self) -> float:
+        """EWMA of the recent per-dispatch q (telemetry.ewma's window/alpha
+        — the shared drift-filter definition; folded over the bounded
+        window deque, so a hot-loop read costs O(window) not O(series))."""
+        return telemetry.ewma(self._q_window)
+
+    @property
+    def q_drift(self) -> float:
+        """Windowed drift of realized q from the provisioned p (0.0 when no
+        p was declared — an unprovisioned server has nothing to drift
+        from)."""
+        if self.provisioned_p is None:
+            return 0.0
+        return self.realized_q_ewma - self.provisioned_p
+
+    @property
     def decisions_per_sample(self) -> float:
         return self.n_decisions / max(self.n_samples, 1)
 
@@ -211,6 +243,9 @@ class ServeStats:
                 "latency_p50": self.latency_p50,
                 "latency_p90": self.latency_p90,
                 "latency_p99": self.latency_p99,
+                "provisioned_p": self.provisioned_p,
+                "realized_q_ewma": self.realized_q_ewma,
+                "q_drift": self.q_drift,
                 "realized_q_series": list(self.realized_q_series)}
 
 
@@ -487,11 +522,13 @@ def _pool_tick(tok, c1, pos, active, start, budget, c_thr, *, s1, backend):
     tokens), hard rows deactivate (parked) — so a tick needs no host
     uploads at all. Returns everything the host needs to park/emit/enqueue:
     (new_c1, hard slab, slab slot ids, slab steps, n_hard, easy mask,
-    hard mask, emitted tokens, new tok lane, new pos lane, new active)."""
+    hard mask, emitted tokens, new tok lane, new pos lane, new active,
+    per-slot exit confidences — the controller's reservoir feed, already
+    computed by the fused decision kernel so exposing it is free)."""
     h, nc1, exit_logits = s1(tok, c1, pos)
     nc1 = _seg_select(active, nc1, c1)
-    exit_mask, _, _ = dispatch.exit_decision_op(exit_logits, c_thr,
-                                                backend=backend)
+    exit_mask, _, conf = dispatch.exit_decision_op(exit_logits, c_thr,
+                                                   backend=backend)
     easy = active & exit_mask
     hard = active & ~exit_mask
     n = tok.shape[0]
@@ -504,7 +541,7 @@ def _pool_tick(tok, c1, pos, active, start, budget, c_thr, *, s1, backend):
     new_pos = pos + easy.astype(jnp.int32)
     new_active = easy & (new_pos - start + 1 < budget)
     return (nc1, slab, slab_slots, slab_steps, n_hard, easy, hard, emit_tok,
-            new_tok, new_pos, new_active)
+            new_tok, new_pos, new_active, conf)
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4, 5))
@@ -578,6 +615,17 @@ class ContinuousScheduler:
 
     ``results`` maps sample id -> list of emitted greedy tokens (stream
     order). Latency is recorded per request in ``stats``.
+
+    **Control surface** (the drift controller's actuators —
+    ``runtime/controller.py``): ``set_c_thr`` re-aims the exit threshold
+    (traced arg, never recompiles), ``set_eager_drain_below`` adapts the
+    partial-bucket drain policy, ``set_active_cap`` bounds live slot
+    occupancy (admission-side, so shrink happens by attrition — no slot is
+    ever preempted), and ``request_capacity`` schedules a bucket re-size
+    that applies only at a DISCRETE re-plan point (empty ring), the one
+    actuation allowed to recompile. With no controller attached every
+    control field keeps its constructor value and the hot loop is
+    byte-for-byte the uncontrolled one.
     """
 
     def __init__(self, fns, sc: ServeConfig, *, n_slots: int, max_len: int,
@@ -589,6 +637,10 @@ class ContinuousScheduler:
         self.sc = sc
         self.n_slots = n_slots
         self.max_len = max_len
+        self.c_thr = float(sc.c_thr)
+        self.controller = None               # attached via controller.attach
+        self.active_cap = n_slots            # live-slot occupancy cap
+        self._pending_capacity: Optional[int] = None
         # starvation-aware dispatch: a pool tick costs the same whether 2 or
         # n_slots rows are active, so once the ACTIVE count dips below this
         # threshold a partial bucket is worth its flush padding — stage-2
@@ -629,6 +681,47 @@ class ContinuousScheduler:
         self._active_lane = None
         self._start_lane = None
         self._budget_lane = None
+
+    # -- control surface (drift-controller actuators) ------------------------
+
+    def set_c_thr(self, c_thr: float) -> None:
+        """Re-aim the exit threshold from the next tick on. ``c_thr`` is a
+        traced argument of the pool tick, so this never recompiles."""
+        self.c_thr = float(c_thr)
+
+    def set_eager_drain_below(self, k: int) -> None:
+        """Adapt the starvation-aware partial-drain policy: dispatch a
+        partial bucket once the live count dips below ``k`` (0 = pure
+        full-bucket dispatch)."""
+        self.eager_drain_below = max(0, int(k))
+
+    def set_active_cap(self, cap: int) -> None:
+        """Bound live slot occupancy. Admission-side: a shrink takes effect
+        by attrition (busy slots finish and are not backfilled), never by
+        preempting an in-flight request. Clamped to [1, n_slots] so the
+        pool always makes progress."""
+        self.active_cap = max(1, min(int(cap), self.n_slots))
+
+    def request_capacity(self, capacity: int) -> None:
+        """Schedule a stage-2 bucket-capacity re-size (the re-plan
+        actuator's apply path). Deferred to the next DISCRETE re-plan
+        point — an empty ring — where no in-flight row's home can change
+        shape under it; the resized ``ring_drain`` is the one steady-state
+        recompile the controller is allowed to cause."""
+        self._pending_capacity = max(1, min(int(capacity), self.n_slots))
+
+    def _maybe_apply_capacity(self) -> None:
+        if self._pending_capacity is None or self.ring.count > 0:
+            return
+        cap, self._pending_capacity = self._pending_capacity, None
+        if cap == self.sc.capacity:
+            return
+        # fresh config + ring at the new capacity (the caller's ServeConfig
+        # is never mutated); the buffer re-allocates lazily on next enqueue
+        self.sc = ServeConfig(capacity=cap, queue_depth=self.sc.queue_depth,
+                              c_thr=self.sc.c_thr,
+                              max_pending=self.sc.max_pending)
+        self.ring = RingQueue(self.sc, self.ex2, self.stats)
 
     # -- admission -----------------------------------------------------------
 
@@ -704,14 +797,19 @@ class ContinuousScheduler:
     def _try_admit(self) -> None:
         """Admit admissible requests in arrival order, chunked to power-of-2
         batch sizes (bounded set of prefill shapes -> bounded compiles). A
-        chunk is a same-prompt-length prefix of the admissible run."""
+        chunk is a same-prompt-length prefix of the admissible run, bounded
+        by free slots AND the controller's live-occupancy cap."""
         while self._free and self.queue:
+            busy = self.n_slots - len(self._free)
+            headroom = min(len(self._free), self.active_cap - busy)
+            if headroom <= 0:
+                return
             now = self.clock.now()
             n_adm = 0
             S0 = len(self.queue[0].prompt)
             for r in self.queue:
                 if (r.arrival_time > now or len(r.prompt) != S0
-                        or n_adm >= len(self._free)):
+                        or n_adm >= headroom):
                     break
                 n_adm += 1
             if n_adm == 0:
@@ -787,16 +885,23 @@ class ContinuousScheduler:
 
     def _tick(self) -> None:
         (self._c1, slab, slots, steps, n_hard_dev, easy, hard, emit_tok,
-         self._tok, self._pos, self._active_lane) = _pool_tick(
+         self._tok, self._pos, self._active_lane, conf) = _pool_tick(
             self._tok, self._c1, self._pos, self._active_lane,
-            self._start_lane, self._budget_lane, self.sc.c_thr,
+            self._start_lane, self._budget_lane, self.c_thr,
             s1=self.fns.s1_raw, backend=dispatch.kernel_backend())
         # the one per-tick host sync: n_hard (control flow) + the easy/hard
-        # masks and emitted tokens (results), fetched together
-        n_hard, easy_np, hard_np, emit_np = jax.device_get(
-            (n_hard_dev, easy, hard, emit_tok))
+        # masks, emitted tokens and confidences (results + the controller's
+        # reservoir feed), fetched together
+        n_hard, easy_np, hard_np, emit_np, conf_np = jax.device_get(
+            (n_hard_dev, easy, hard, emit_tok, conf))
         n_hard = int(n_hard)
-        self.stats.record_decisions(int(easy_np.sum()) + n_hard, n_hard)
+        n_dec = int(easy_np.sum()) + n_hard
+        self.stats.record_decisions(n_dec, n_hard)
+        if self.controller is not None:
+            # SENSE: only live rows' confidences are real (free/parked rows
+            # compute garbage that the masks discard)
+            self.controller.on_tick(self, n_dec, n_hard,
+                                    conf_np[easy_np | hard_np])
         for i in np.nonzero(easy_np)[0]:
             self._emit(int(i), int(emit_np[i]))
         if n_hard > 0:
@@ -823,6 +928,7 @@ class ContinuousScheduler:
         only when nothing else can make progress (all busy slots parked) —
         the HAPI-style staged policy."""
         while True:
+            self._maybe_apply_capacity()     # discrete re-plan point only
             self._try_admit()
             if self._n_state(_ACTIVE) > 0:
                 self._tick()
@@ -871,10 +977,18 @@ class SyncScheduler:
         self.clock = clock or Clock()
         self.queue: Deque[Request] = deque()
         self.results: Dict[int, List[int]] = {}
+        self.controller = None               # attached via controller.attach
+        self._seen_decisions = 0
+        self._seen_hard = 0
 
     @property
     def stats(self) -> ServeStats:
         return self.server.stats
+
+    def set_c_thr(self, c_thr: float) -> None:
+        """Threshold actuation on the sync policy: batch granularity (the
+        step-synchronous server re-reads its threshold per generate)."""
+        self.server.set_c_thr(c_thr)
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -894,6 +1008,16 @@ class SyncScheduler:
                 self.results[r.sample_id] = [
                     int(x) for x in out["tokens"][i, :r.n_tokens]]
                 self.stats.record_finish(r.sample_id, t)
+            if self.controller is not None:
+                # one controller visit per static batch (the sync policy's
+                # natural actuation granularity); confidences arrive via
+                # the server's conf sink, wired at attach
+                st = self.stats
+                n_dec = st.n_decisions - self._seen_decisions
+                n_hard = st.n_stage2 - self._seen_hard
+                self._seen_decisions = st.n_decisions
+                self._seen_hard = st.n_stage2
+                self.controller.on_tick(self, n_dec, n_hard, None)
         return self.results
 
 

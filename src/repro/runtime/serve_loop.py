@@ -118,15 +118,18 @@ def _decide_compact(hidden, exit_logits, sample_ids, c_thr, *, backend):
     threshold never recompiles; the resolved kernel backend is a static
     arg, so a dispatch override is honored rather than baked in at first
     trace). Compaction capacity = the stage-1 batch, so no hard sample is
-    ever dropped here; the ring applies backpressure."""
-    exit_mask, _, _ = dispatch.exit_decision_op(exit_logits, c_thr,
-                                                backend=backend)
+    ever dropped here; the ring applies backpressure. The per-row
+    confidences the fused kernel already computes ride along for the
+    drift-telemetry reservoir (free on device; only fetched when a
+    controller is listening)."""
+    exit_mask, _, conf = dispatch.exit_decision_op(exit_logits, c_thr,
+                                                   backend=backend)
     b = hidden.shape[0]
     slab, pos, n_hard = dispatch.gather_compact_op(hidden, ~exit_mask, b,
                                                    backend=backend)
     slab_ids = jnp.where(pos >= 0,
                          jnp.take(sample_ids, jnp.maximum(pos, 0)), -1)
-    return slab, slab_ids, n_hard, exit_mask
+    return slab, slab_ids, n_hard, exit_mask, conf
 
 
 # ---------------------------------------------------------------------------
@@ -145,6 +148,14 @@ class _RingedServer:
         self.stats = ServeStats()
         self.stats.record_placement(self.placement)
         self.ring = RingQueue(sc, self.ex2, self.stats)
+        # control surface: the live threshold (traced — re-aiming it never
+        # recompiles) and an optional telemetry sink for the per-decision
+        # confidences (None = no extra host fetch on the hot path)
+        self.c_thr = float(sc.c_thr)
+        self.conf_sink = None
+
+    def set_c_thr(self, c_thr: float) -> None:
+        self.c_thr = float(c_thr)
 
     @property
     def _count(self) -> int:             # host mirror of the ring count
@@ -262,9 +273,12 @@ class TwoStageServer(_RingedServer):
         ids_dev = self.ex1.place_io(jnp.asarray(np.asarray(sample_ids,
                                                            np.int32)))
         hidden, exit_logits = self.stage1(tokens)
-        slab, slab_ids, n_hard_dev, exit_mask = _decide_compact(
-            hidden, exit_logits, ids_dev, self.sc.c_thr,
+        slab, slab_ids, n_hard_dev, exit_mask, conf = _decide_compact(
+            hidden, exit_logits, ids_dev, self.c_thr,
             backend=dispatch.kernel_backend())
+        if self.conf_sink is not None:        # rides the n_hard sync
+            n_hard_dev, conf_np = jax.device_get((n_hard_dev, conf))
+            self.conf_sink.extend(conf_np)
         n_hard = int(n_hard_dev)              # the one host sync per batch
         b = int(tokens.shape[0])
         self.stats.n_samples += b
@@ -529,9 +543,12 @@ class DecodeServer(_RingedServer):
         logits (device, on ex1). Ring drains fully — decode is
         step-synchronous."""
         h_rows, self._c1, exit_logits = self.fns.s1(tok, self._c1, pos)
-        slab, slab_ids, n_hard_dev, _ = _decide_compact(
-            h_rows, exit_logits, self._ids, self.sc.c_thr,
+        slab, slab_ids, n_hard_dev, _, conf = _decide_compact(
+            h_rows, exit_logits, self._ids, self.c_thr,
             backend=dispatch.kernel_backend())
+        if self.conf_sink is not None:       # rides the n_hard sync
+            n_hard_dev, conf_np = jax.device_get((n_hard_dev, conf))
+            self.conf_sink.extend(conf_np)
         n_hard = int(n_hard_dev)             # the one host sync per step
         b = h_rows.shape[0]
         self.stats.record_decisions(b, n_hard)

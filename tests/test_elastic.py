@@ -1,0 +1,90 @@
+"""Elastic re-meshing (the tests runtime/elastic.py's docstring promises):
+replan degradation monotonicity over shrinking chip budgets, the
+infeasible-budget raise, the drift-side ``replan_rate`` recovery, and the
+``degrade_mesh`` survivor carve."""
+import numpy as np
+import pytest
+
+from repro.core.stage_mesh import StageMeshPlan
+from repro.core.tap import DesignPoint, TAPFunction
+from repro.runtime.elastic import (ElasticPlan, degrade_mesh, replan,
+                                   replan_rate)
+
+
+def _tap(scale: float, max_chips: int = 16) -> TAPFunction:
+    """Linear-throughput TAP over (chips, hbm_gb) budgets — monotone by
+    construction, one point per chip count."""
+    return TAPFunction([
+        DesignPoint(resources=(float(c), c * 8.0), throughput=scale * c)
+        for c in range(1, max_chips + 1)])
+
+
+def test_replan_degradation_monotone():
+    """Shrinking the chip budget never increases the re-planned
+    throughput, and the degradation ratio stays in (0, 1]."""
+    t1, t2 = _tap(100.0), _tap(60.0)
+    prev = None
+    for after in (16, 12, 8, 4, 2):
+        ep = replan(t1, t2, p=0.25, chips_before=16, chips_after=after)
+        assert isinstance(ep, ElasticPlan)
+        assert 0.0 < ep.degradation <= 1.0 + 1e-9
+        if prev is not None:
+            assert ep.throughput_after <= prev + 1e-9
+        prev = ep.throughput_after
+    full = replan(t1, t2, p=0.25, chips_before=16, chips_after=16)
+    assert full.degradation == pytest.approx(1.0)
+
+
+def test_replan_infeasible_budget_raises():
+    """A budget below every design point's footprint must fail loudly, not
+    yield a silent None plan."""
+    t1, t2 = _tap(100.0), _tap(60.0)
+    with pytest.raises(RuntimeError, match="no feasible design"):
+        replan(t1, t2, p=0.25, chips_before=16, chips_after=1)
+    # chips_after=1 is infeasible because BOTH stages need >= 1 chip each
+
+
+def test_replan_rate_recovers_throughput_at_observed_q():
+    """The drift re-plan: at q > p the p-provisioned design under-serves
+    stage 2; re-combining at q must do at least as well at q (degradation
+    ratio >= 1 reads as recovered throughput), and re-planning at q = p is
+    a no-op."""
+    t1, t2 = _tap(100.0), _tap(60.0)
+    ep = replan_rate(t1, t2, p=0.1, q=0.6, chips=12)
+    assert ep.chips_before == ep.chips_after == 12
+    assert ep.throughput_after >= ep.throughput_before - 1e-9
+    same = replan_rate(t1, t2, p=0.25, q=0.25, chips=12)
+    assert same.throughput_after == pytest.approx(same.throughput_before)
+    # the q-matched design is the Eq. (1) argmax at q: its design
+    # throughput evaluated at q equals its runtime throughput there
+    assert ep.design.throughput_at(0.6) == pytest.approx(
+        ep.throughput_after)
+
+
+def test_replan_rate_infeasible_raises():
+    t1, t2 = _tap(100.0), _tap(60.0)
+    with pytest.raises(RuntimeError, match="no feasible design"):
+        replan_rate(t1, t2, p=0.25, q=0.9, chips=1)
+
+
+def test_degrade_mesh_survivor_carve():
+    """Failed device indices drop; the surviving carve is order-preserving,
+    disjoint between stages, exactly plan-sized, and contains no failed
+    device."""
+    devices = [f"dev{i}" for i in range(10)]
+    plan = StageMeshPlan.from_chips(4, 3)
+    m1, m2 = degrade_mesh(devices, failed=[1, 5, 8], plan=plan)
+    d1 = [d for d in np.asarray(m1.devices).flat]
+    d2 = [d for d in np.asarray(m2.devices).flat]
+    assert d1 == ["dev0", "dev2", "dev3", "dev4"]
+    assert d2 == ["dev6", "dev7", "dev9"]
+    assert not (set(d1) & set(d2))
+    for failed in ("dev1", "dev5", "dev8"):
+        assert failed not in d1 + d2
+
+
+def test_degrade_mesh_insufficient_survivors_raises():
+    devices = [f"dev{i}" for i in range(6)]
+    plan = StageMeshPlan.from_chips(4, 2)
+    with pytest.raises(ValueError, match="available"):
+        degrade_mesh(devices, failed=[0, 1], plan=plan)
