@@ -1,0 +1,158 @@
+"""Serving telemetry: the SENSE/FILTER layer of the drift control plane.
+
+ATHEENA provisions the stage mesh for a *measured* exit probability p, but
+the realized hard rate q drifts with the live input distribution. This
+module owns the filtered views of the serving signals the controller
+(``runtime/controller.py``) consumes:
+
+  * ``ewma`` — the one definition of the windowed exponentially-weighted
+    realized-q average. ``ServeStats.realized_q_ewma`` and the drift
+    benchmarks call the same function, so "the EWMA of realized q" means
+    exactly one thing across the repo (controller hysteresis, the
+    ``q_drift`` field in ``ServeStats.as_dict`` and the
+    ``serve_drift`` convergence gate all agree).
+  * ``ConfidenceReservoir`` — a rolling window of recent stage-1
+    max-softmax confidences: the ONLINE calibration set. Offline, C_thr is
+    the (1 - p)-quantile of a profiling set; online, the reservoir is that
+    profiling set, continuously refreshed, so re-solving the quantile
+    steers the realized exit rate back to the provisioned p under the
+    *current* input distribution.
+  * ``ControlWindow`` — per-actuation-window counters (decisions, hard
+    tokens, stalls, bucket fill) computed as deltas between controller
+    visits, so actuation decisions see the RECENT regime rather than
+    lifetime averages that an old regime dominates.
+
+Everything here is host-side numpy over scalars the hot loops already
+sync; sensing adds no device round-trips of its own.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Iterable, Optional
+
+import numpy as np
+
+# Window bound for the drift view: the re-planning signal cares about
+# *persistent* drift over the recent past, and an EWMA over an unbounded
+# series would make old regimes haunt the estimate forever (besides being
+# O(n) to fold). 256 dispatches is minutes of serving at any real tick
+# rate and a few seconds on the CPU benches.
+DRIFT_WINDOW = 256
+
+# Default smoothing for the drift filter. At alpha = 0.1 a step change in
+# q reaches ~65% of its new value in 10 dispatches — fast enough to catch
+# a phase change within one controller persistence window, slow enough
+# that one weird bucket doesn't trip the hysteresis band.
+DRIFT_ALPHA = 0.1
+
+
+def ewma(series: Iterable[float], alpha: float = DRIFT_ALPHA,
+         window: int = DRIFT_WINDOW) -> float:
+    """Exponentially-weighted moving average over the LAST ``window``
+    entries of ``series`` (0.0 when empty). The single shared definition of
+    'the EWMA of realized q' — see the module docstring."""
+    tail = list(series)[-window:] if window else list(series)
+    v: Optional[float] = None
+    for x in tail:
+        v = float(x) if v is None else alpha * float(x) + (1.0 - alpha) * v
+    return 0.0 if v is None else v
+
+
+class ConfidenceReservoir:
+    """Rolling reservoir of recent stage-1 exit-head confidences — the
+    online calibration set for threshold re-solving. Bounded (FIFO
+    overwrite), so long-running streams keep O(size) memory and the
+    quantile always reflects the recent input distribution."""
+
+    def __init__(self, size: int = 4096):
+        if size < 1:
+            raise ValueError(f"reservoir size must be >= 1, got {size}")
+        self.size = size
+        self._buf: Deque[float] = deque(maxlen=size)
+
+    def extend(self, confidences) -> None:
+        arr = np.asarray(confidences, np.float32).reshape(-1)
+        self._buf.extend(float(c) for c in arr)
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    @property
+    def full(self) -> bool:
+        return len(self._buf) == self.size
+
+    def snapshot(self) -> np.ndarray:
+        """The current calibration set, oldest first."""
+        return np.asarray(self._buf, np.float32)
+
+    def clear(self) -> None:
+        self._buf.clear()
+
+
+class ControlWindow:
+    """Windowed counter deltas between controller visits.
+
+    The controller acts on the CURRENT regime; lifetime stats (what
+    ``ServeStats`` accumulates) average over every regime seen since boot.
+    ``observe``/``observe_counters`` fold one tick/batch in; the aggregate
+    properties (and ``as_dict``) read the open window, and ``reset``
+    starts the next one (counter high-water marks persist across
+    resets)."""
+
+    def __init__(self):
+        # high-water marks of the lifetime counters survive reset():
+        # deltas are vs the previous VISIT, not vs window start
+        self._hw_stalls = 0
+        self._hw_buckets = 0
+        self._hw_fill = 0.0
+        self.reset()
+
+    def reset(self) -> None:
+        self.ticks = 0
+        self.decisions = 0
+        self.hard = 0
+        self.stalls = 0
+        self.buckets = 0
+        self.bucket_fill = 0.0
+
+    def observe(self, n_decisions: int, n_hard: int) -> None:
+        self.ticks += 1
+        self.decisions += int(n_decisions)
+        self.hard += int(n_hard)
+
+    def observe_counters(self, n_stalls: int, n_buckets: int,
+                         bucket_fill_sum: float) -> None:
+        """Fold lifetime counters in as deltas vs the previous visit (the
+        caller passes the CURRENT lifetime values; this keeps its own
+        high-water marks)."""
+        self.stalls += max(0, int(n_stalls) - self._hw_stalls)
+        self.buckets += max(0, int(n_buckets) - self._hw_buckets)
+        self.bucket_fill += max(0.0, float(bucket_fill_sum) - self._hw_fill)
+        self._hw_stalls = int(n_stalls)
+        self._hw_buckets = int(n_buckets)
+        self._hw_fill = float(bucket_fill_sum)
+
+    @property
+    def q(self) -> float:
+        """Realized hard rate within this window."""
+        return self.hard / self.decisions if self.decisions else 0.0
+
+    @property
+    def mean_active(self) -> float:
+        """Mean decisions per tick = mean live slots doing stage-1 work."""
+        return self.decisions / self.ticks if self.ticks else 0.0
+
+    @property
+    def stall_rate(self) -> float:
+        """Backpressure stalls per tick within the window."""
+        return self.stalls / self.ticks if self.ticks else 0.0
+
+    @property
+    def mean_bucket_fill(self) -> float:
+        return self.bucket_fill / self.buckets if self.buckets else 0.0
+
+    def as_dict(self) -> dict:
+        return {"ticks": self.ticks, "decisions": self.decisions,
+                "q": self.q, "mean_active": self.mean_active,
+                "stall_rate": self.stall_rate,
+                "mean_bucket_fill": self.mean_bucket_fill}
