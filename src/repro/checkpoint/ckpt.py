@@ -28,6 +28,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.runtime import faults
+
 
 _COMMIT = "COMMITTED"
 
@@ -48,6 +50,9 @@ def save(ckpt_dir: str, step: int, tree: Any, *, extra: Optional[dict] = None
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     manifest = {}
     for path, leaf in leaves:
+        # crash-simulation boundary: a fault here models a writer dying
+        # mid-leaf — only the .tmp dir exists, nothing restorable
+        faults.fault_point("ckpt:leaf")
         key = _leaf_key(path)
         arr = np.asarray(jax.device_get(leaf))
         dtype_str = str(arr.dtype)
@@ -62,6 +67,10 @@ def save(ckpt_dir: str, step: int, tree: Any, *, extra: Optional[dict] = None
     if os.path.exists(fin):
         shutil.rmtree(fin)
     os.rename(tmp, fin)
+    # crash-simulation boundary: a fault here models a crash between the
+    # rename and the commit marker — the directory exists fully written but
+    # UNCOMMITTED, and restore/latest_step must treat it as absent
+    faults.fault_point("ckpt:precommit")
     # the commit marker is written only after the rename lands
     with open(os.path.join(fin, _COMMIT), "w") as f:
         f.write(str(step))

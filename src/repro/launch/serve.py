@@ -31,9 +31,20 @@ realized hard rate q drifts persistently outside ``--controller-band``
 around the provisioned ``--p``, C_thr is re-solved online from the rolling
 confidence reservoir (and the scheduler's drain policy / live-slot cap
 adapt from latency+occupancy feedback); past the re-plan band the Eq. (1)
-stage re-plan is reported, and applied to the bucket capacity under
-``--controller-replan``. The controller's state machine report rides in
-the output JSON.
+stage re-plan is reported, and APPLIED under ``--controller-replan``: on a
+disaggregated continuous scheduler the full chip re-split executes as a
+zero-downtime live migration (``runtime/migration.py`` — quiesce /
+snapshot / re-place / resume, rolled back on failure), otherwise the
+bucket-capacity half applies alone. The controller's state machine report
+and the migration counters (``n_migrations``, ``n_migration_rollbacks``,
+``migration_pause_p50_ms/p99_ms``) ride in the output JSON.
+
+Fault injection (chaos testing): set ``REPRO_FAULT_PLAN`` to a plan like
+``dispatch@3;transfer@2#transient`` (``point@nth[#transient]`` entries —
+see ``runtime/faults.py``) to arm deterministic faults at the runtime's
+dispatch/enqueue/transfer/migration boundaries; ``REPRO_FAULT_LOG=<path>``
+appends the structured injection/retry/rollback log as JSON lines at
+exit.
 
 ``--disaggregate`` places the two stages on disjoint submeshes (the paper's
 §IV spatial apportionment): stage 1 + the exit kernels on the first chips1
@@ -129,9 +140,11 @@ def main(argv=None) -> int:
                          "live-slot occupancy cap (default: no cap "
                          "control)")
     ap.add_argument("--controller-replan", action="store_true",
-                    help="APPLY the stage re-plan's bucket-capacity half "
-                         "at discrete re-plan points (default: report "
-                         "only)")
+                    help="APPLY the stage re-plan at discrete re-plan "
+                         "points (default: report only): a zero-downtime "
+                         "live migration of the full chip split on a "
+                         "disaggregated continuous scheduler, else the "
+                         "bucket-capacity half alone")
     ap.add_argument("--disaggregate", action="store_true",
                     help="stage 1 / stage 2 on disjoint submeshes")
     ap.add_argument("--chips1", type=int, default=None,

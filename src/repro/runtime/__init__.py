@@ -1,2 +1,3 @@
-from repro.runtime import (controller, elastic, serve_loop, stage_executor,
-                           telemetry, train_loop)
+from repro.runtime import (controller, elastic, faults, migration,
+                           scheduler, serve_loop, stage_executor, telemetry,
+                           train_loop)

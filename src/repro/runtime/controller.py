@@ -25,8 +25,12 @@ schedulers already sync:
       │          │            │                  re-combined at the observed
       │          │            │                  q (elastic.replan_rate /
       │          │            │                  proportional split); report,
-      │          │            │                  or apply the bucket-capacity
-      │          │            │                  half at a discrete point
+      │          │            │                  or apply — a full live
+      │          │            │                  chip-re-split migration
+      │          │            │                  (runtime/migration.py) when
+      │          │            │                  the scheduler can rebuild
+      │          │            │                  its stage fns, else the
+      │          │            │                  bucket-capacity half
       │          │            └─ |EWMA(q) - p| must exceed the band for
       │          │               ``persistence_ticks`` consecutive visits;
       │          │               re-arm only below the release band
@@ -322,10 +326,13 @@ class DriftController:
     def _replan(self, sched) -> None:
         """Stage re-plan at the observed q: the real Eq. (1) re-combination
         when TAP curves are in hand, else the p-proportional split over the
-        current chip count. The chip re-split is REPORTED (live pool
-        re-size across submeshes is future work — see ROADMAP); the bucket
-        capacity half is applied at a discrete re-plan point under
-        ``apply_replan``."""
+        current chip count. Under ``apply_replan`` the re-plan is APPLIED:
+        a full live migration (chip re-split + stage-fns rebuild + bucket
+        re-size through ``runtime.migration.LiveMigrator``) when the
+        scheduler can rebuild its stage callables against a new placement
+        (``fns_factory``) and the placement is disaggregated; otherwise
+        the bucket-capacity half via ``request_capacity``. Either applies
+        only at a discrete re-plan point."""
         cfg, st = self.cfg, self.state
         q = min(max(st.q_ewma, 0.01), 1.0)
         plan = None
@@ -345,11 +352,29 @@ class DriftController:
                 plan = StageMeshPlan.proportional(q, n_dev)
         st.recommended_plan = plan
         st.n_replans += 1
-        applied = False
-        if cfg.apply_replan and hasattr(sched, "request_capacity"):
-            cap = stage2_capacity(sched.n_slots, q, multiple=1)
-            sched.request_capacity(cap)
-            applied = True
+        applied = None
+        if cfg.apply_replan:
+            cap = (stage2_capacity(sched.n_slots, q, multiple=1)
+                   if hasattr(sched, "n_slots") else None)
+            factory = getattr(sched, "fns_factory", None)
+            placement = getattr(sched, "placement", None)
+            if (plan is not None and factory is not None
+                    and hasattr(sched, "request_migration")
+                    and placement is not None and placement.disaggregated):
+                # full chip re-split: carve the re-planned submeshes out of
+                # the SAME device set the current placement occupies and
+                # hand the migrator placement + rebuilt fns + capacity
+                from repro.runtime.migration import MigrationPlan
+                devs = (list(placement.ex1.devices)
+                        + list(placement.ex2.devices))
+                new_pl = type(placement).from_plan(plan, devs)
+                sched.request_migration(MigrationPlan(
+                    placement=new_pl, fns=factory(new_pl), capacity=cap,
+                    reason=f"controller-replan:q={q:.3f}"))
+                applied = "migration"
+            elif cap is not None and hasattr(sched, "request_capacity"):
+                sched.request_capacity(cap)
+                applied = "capacity"
         st.log("replan", q=q,
                plan=(None if plan is None else (plan.chips1, plan.chips2)),
                recovered_throughput_ratio=recovered, applied=applied)

@@ -85,6 +85,21 @@ def degrade_mesh(devices: Sequence, failed: Sequence[int],
     return make_stage_meshes(np.array(alive, dtype=object), plan)
 
 
+def degrade_placement(devices: Sequence, failed: Sequence[int],
+                      plan: StageMeshPlan, *, shard_io: bool = True):
+    """Device-loss analogue of ``StagePlacement.from_plan``: drop failed
+    device indices and carve the re-planned stage submeshes out of the
+    survivors. This is the placement half of device-loss degradation — the
+    live migrator (``runtime/migration.py``) re-places the running pool
+    onto it so a lost chip degrades throughput instead of crashing the
+    server."""
+    from repro.runtime.stage_executor import StageExecutor, StagePlacement
+    m1, m2 = degrade_mesh(devices, failed, plan)
+    return StagePlacement(
+        StageExecutor(m1, shard_io=shard_io, name="stage1"),
+        StageExecutor(m2, shard_io=shard_io, name="stage2"))
+
+
 def relayout(tree, shardings):
     """Move a checkpoint pytree onto a (new) sharding pytree."""
     return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)

@@ -1,0 +1,293 @@
+"""Deterministic fault injection for the serving runtime.
+
+A serving stack is only fault-tolerant if its failure handling is
+*executable on demand*: device loss, stuck transfers and mid-dispatch
+errors are rare in CI exactly when they are common in production (the
+dynamic-conditions gap the adaptive-inference survey pins on early-exit
+systems). This module plants named **fault points** at the runtime's
+dispatch / enqueue / transfer / migration-stage boundaries and arms them
+from a seeded, fully deterministic ``FaultPlan`` — so every "what if the
+3rd bucket dispatch dies?" scenario is a reproducible test case, not a
+postmortem.
+
+Fault points fire by *visit count*: the plan ``dispatch@3`` raises an
+``InjectedFault`` on the third arrival at the ``dispatch`` point and never
+again. Faults come in two kinds:
+
+  * **fatal** (default) — models a hard failure. Callers either propagate
+    it (a serving hot loop dies loudly, never hangs) or compensate (the
+    migration state machine rolls back to the pre-migration placement);
+  * **transient** (``dispatch@3#transient``) — models a retryable blip
+    (a flaky transfer, a transiently wedged drain). ``retry`` wrappers at
+    the drain / cross-stage ``device_put`` boundaries absorb these with
+    exponential backoff, so the request stream never notices.
+
+Activation:
+
+  * ``REPRO_FAULT_PLAN`` environment variable — the ambient plan, parsed
+    once on first use (the CI chaos job sweeps this across the
+    scheduler/migration test suites);
+  * ``install(plan)`` / ``clear()`` / ``installed(plan)`` — programmatic
+    (tests); an installed plan shadows the ambient one, ``clear()``
+    restores it.
+
+Every injection, retry and survival is appended to a bounded structured
+event log (``telemetry.EventLog``). When ``REPRO_FAULT_LOG`` names a
+file, the log is flushed there as JSON lines at process exit — the CI
+chaos job uploads it as the fault-sweep artifact.
+
+With neither env var set and nothing installed, ``fault_point`` is a
+single module-global ``None`` check — the hot loops pay nanoseconds.
+"""
+from __future__ import annotations
+
+import atexit
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.runtime.telemetry import EventLog
+
+ENV_PLAN = "REPRO_FAULT_PLAN"
+ENV_LOG = "REPRO_FAULT_LOG"
+
+FAULT_KINDS = ("fatal", "transient")
+
+# the runtime's named fault points (kept here so seeded plan generation and
+# the chaos sweep agree on the universe of injectable boundaries)
+POINTS = ("dispatch", "enqueue", "transfer",
+          "migrate:quiesce", "migrate:snapshot", "migrate:replace",
+          "migrate:resume", "ckpt:leaf", "ckpt:precommit")
+
+LOG = EventLog(cap=4096)
+
+
+class InjectedFault(RuntimeError):
+    """A fault raised by an armed fault point. ``transient`` marks it
+    retryable — ``retry`` absorbs those; everything else must be
+    propagated or compensated by the caller."""
+
+    def __init__(self, point: str, *, transient: bool = False,
+                 visit: int = 0):
+        kind = "transient" if transient else "fatal"
+        super().__init__(f"injected {kind} fault at '{point}' "
+                         f"(visit {visit})")
+        self.point = point
+        self.transient = transient
+        self.visit = visit
+
+
+@dataclass
+class FaultPlan:
+    """Deterministic visit-count triggers: ``{point: [(nth, kind), ...]}``.
+    Each trigger fires exactly once, on the nth arrival at its point
+    (1-based). Counters live on the plan, so installing a fresh plan
+    re-arms everything."""
+    triggers: Dict[str, List[Tuple[int, str]]] = field(default_factory=dict)
+    visits: Dict[str, int] = field(default_factory=dict, repr=False)
+    origin: str = ""                 # the as-parsed spec (triggers mutate
+                                     # as they fire; the log wants the
+                                     # armed plan, not the residue)
+
+    def __post_init__(self):
+        if not self.origin:
+            self.origin = self.spec()
+
+    @classmethod
+    def parse(cls, spec: str) -> "FaultPlan":
+        """Parse ``"dispatch@3;transfer@2#transient"`` — entries separated
+        by ';' or ',', each ``point@nth[#kind]`` (point names may contain
+        ':', so the '@' is split from the right)."""
+        triggers: Dict[str, List[Tuple[int, str]]] = {}
+        for entry in spec.replace(",", ";").split(";"):
+            entry = entry.strip()
+            if not entry:
+                continue
+            point, _, tail = entry.rpartition("@")
+            if not point:
+                raise ValueError(f"bad fault entry {entry!r}: want "
+                                 f"'point@nth[#kind]'")
+            nth_s, _, kind = tail.partition("#")
+            kind = kind or "fatal"
+            if kind not in FAULT_KINDS:
+                raise ValueError(f"bad fault kind {kind!r} in {entry!r}; "
+                                 f"choose from {FAULT_KINDS}")
+            try:
+                nth = int(nth_s)
+            except ValueError:
+                raise ValueError(f"bad visit count {nth_s!r} in {entry!r}")
+            if nth < 1:
+                raise ValueError(f"visit count must be >= 1 in {entry!r}")
+            triggers.setdefault(point, []).append((nth, kind))
+        return cls(triggers=triggers)
+
+    @classmethod
+    def seeded(cls, seed: int, points: Sequence[str] = POINTS,
+               n_faults: int = 1, max_nth: int = 8,
+               p_transient: float = 0.5) -> "FaultPlan":
+        """A reproducible random plan — the chaos sweep / property tests'
+        generator. Same seed, same plan, always."""
+        rng = np.random.default_rng(seed)
+        triggers: Dict[str, List[Tuple[int, str]]] = {}
+        for _ in range(n_faults):
+            point = points[int(rng.integers(len(points)))]
+            nth = int(rng.integers(1, max_nth + 1))
+            kind = ("transient" if rng.random() < p_transient else "fatal")
+            triggers.setdefault(point, []).append((nth, kind))
+        return cls(triggers=triggers)
+
+    def spec(self) -> str:
+        """Inverse of ``parse`` (for logs and the sweep artifact)."""
+        parts = []
+        for point, trigs in sorted(self.triggers.items()):
+            for nth, kind in trigs:
+                suffix = "" if kind == "fatal" else f"#{kind}"
+                parts.append(f"{point}@{nth}{suffix}")
+        return ";".join(parts)
+
+    def visit(self, point: str) -> Optional[str]:
+        """Register one arrival at ``point``; return the armed kind when a
+        trigger fires (consuming it), else None."""
+        n = self.visits.get(point, 0) + 1
+        self.visits[point] = n
+        trigs = self.triggers.get(point)
+        if not trigs:
+            return None
+        for i, (nth, kind) in enumerate(trigs):
+            if nth == n:
+                del trigs[i]
+                return kind
+        return None
+
+
+# ---------------------------------------------------------------------------
+# the active plan: installed > ambient (env) > none
+# ---------------------------------------------------------------------------
+
+_UNSET = object()
+_installed: object = _UNSET          # sentinel: nothing installed
+_ambient: object = _UNSET            # parsed lazily from REPRO_FAULT_PLAN
+
+
+def ambient() -> Optional[FaultPlan]:
+    """The env-derived plan (parsed once; None when REPRO_FAULT_PLAN is
+    unset/empty). The chaos sweep sets this; tests that must distinguish
+    'my installed fault' from 'sweep noise' consult it."""
+    global _ambient
+    if _ambient is _UNSET:
+        spec = os.environ.get(ENV_PLAN, "").strip()
+        _ambient = FaultPlan.parse(spec) if spec else None
+    return _ambient
+
+
+def active_plan() -> Optional[FaultPlan]:
+    if _installed is not _UNSET:
+        return _installed            # may be None: installed(None) muffles
+    return ambient()
+
+
+def install(plan: Optional[FaultPlan]) -> None:
+    """Arm ``plan`` for this process (shadows the ambient env plan).
+    ``install(None)`` suppresses fault injection entirely until
+    ``clear()``."""
+    global _installed
+    _installed = plan
+
+
+def clear() -> None:
+    """Drop the installed plan; the ambient env plan (if any) resumes."""
+    global _installed
+    _installed = _UNSET
+
+
+class installed:
+    """Context manager: arm a plan for the body, restore on exit.
+    ``installed(None)`` runs the body fault-free."""
+
+    def __init__(self, plan: Optional[FaultPlan]):
+        self.plan = plan
+        self._prev: object = _UNSET
+
+    def __enter__(self):
+        global _installed
+        self._prev = _installed
+        _installed = self.plan
+        return self.plan
+
+    def __exit__(self, *exc):
+        global _installed
+        _installed = self._prev
+        return False
+
+
+def fault_point(point: str) -> None:
+    """One arrival at a named fault boundary. No-op (one global check)
+    unless an active plan has an armed trigger for this point and visit."""
+    plan = active_plan()
+    if plan is None:
+        return
+    kind = plan.visit(point)
+    if kind is None:
+        return
+    visit = plan.visits[point]
+    LOG.emit("inject", point=point, kind=kind, visit=visit)
+    raise InjectedFault(point, transient=(kind == "transient"), visit=visit)
+
+
+# ---------------------------------------------------------------------------
+# retry-with-backoff: the survival half for transient faults
+# ---------------------------------------------------------------------------
+
+def is_transient(exc: BaseException) -> bool:
+    return bool(getattr(exc, "transient", False))
+
+
+def retry(fn: Callable, *args, retries: int = 3, base_delay: float = 0.005,
+          what: str = "", **kwargs):
+    """Call ``fn``; on a *transient* failure, back off exponentially and
+    retry up to ``retries`` times. Anything non-transient (real bugs,
+    fatal injected faults) propagates on first raise — retries must never
+    mask a correctness error. The wrapped call must be idempotent up to
+    its first side effect (the runtime's fault points sit before any
+    mutation, so a retried drain/transfer re-runs cleanly)."""
+    attempt = 0
+    while True:
+        try:
+            return fn(*args, **kwargs)
+        except BaseException as exc:
+            if not is_transient(exc) or attempt >= retries:
+                raise
+            LOG.emit("retry", what=what or getattr(fn, "__name__", "call"),
+                     attempt=attempt + 1, error=str(exc))
+            time.sleep(base_delay * (2.0 ** attempt))
+            attempt += 1
+
+
+# ---------------------------------------------------------------------------
+# the fault-log artifact
+# ---------------------------------------------------------------------------
+
+def flush_log(path: Optional[str] = None) -> Optional[str]:
+    """Append the event log as JSON lines to ``path`` (default:
+    ``REPRO_FAULT_LOG``; no-op when neither is set). Appending keeps one
+    artifact across a multi-process sweep; each line carries the pid and
+    the plan spec that was armed."""
+    path = path or os.environ.get(ENV_LOG)
+    if not path or not len(LOG):
+        return None
+    plan = active_plan()
+    spec = plan.origin if plan is not None else ""
+    with open(path, "a") as f:
+        for ev in LOG.as_list():
+            f.write(json.dumps({"pid": os.getpid(), "plan": spec, **ev},
+                               default=str) + "\n")
+    LOG.clear()
+    return path
+
+
+if os.environ.get(ENV_LOG):          # pragma: no cover - process teardown
+    atexit.register(flush_log)

@@ -66,7 +66,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import dispatch
-from repro.runtime import telemetry
+from repro.runtime import faults, telemetry
 from repro.runtime.stage_executor import StagePlacement
 
 
@@ -79,6 +79,40 @@ class ServeConfig:
                                     # batches + stage-2 buckets) before the
                                     # oldest are harvested to host, bounding
                                     # device memory on long-running streams
+    harvest_timeout_s: Optional[float] = 60.0   # bound on any single wait
+                                    # for a pending device result; a bucket
+                                    # that never resolves raises
+                                    # HarvestTimeout instead of wedging the
+                                    # hot loop (None = wait forever)
+
+
+class HarvestTimeout(TimeoutError):
+    """A pending device result failed to become ready within the harvest
+    timeout — surfaces a wedged transfer/dispatch as an error instead of an
+    unbounded hot-loop hang."""
+
+
+def bounded_wait(tree, timeout_s: Optional[float], what: str = "result"):
+    """Wait for every jax.Array leaf of ``tree`` to be ready, raising
+    ``HarvestTimeout`` past ``timeout_s`` (None = block natively). Polls
+    ``is_ready()`` with a growing sleep so the fast path (already-ready
+    results, the overwhelmingly common case) costs one no-op pass."""
+    if timeout_s is None:
+        return tree
+    deadline = time.perf_counter() + timeout_s
+    pause = 1e-4
+    for leaf in jax.tree.leaves(tree):
+        is_ready = getattr(leaf, "is_ready", None)
+        if is_ready is None:                 # numpy/python leaf: ready
+            continue
+        while not is_ready():
+            if time.perf_counter() >= deadline:
+                raise HarvestTimeout(
+                    f"{what} not ready after {timeout_s:.1f}s — a device "
+                    f"dispatch or cross-stage transfer is stuck")
+            time.sleep(pause)
+            pause = min(pause * 2.0, 0.05)
+    return tree
 
 
 # bounded history so long-running streams keep O(1)-ish stats memory: the
@@ -142,6 +176,14 @@ class ServeStats:
     _q_window: Deque[float] = field(
         default_factory=lambda: deque(maxlen=telemetry.DRIFT_WINDOW),
         repr=False)
+    # live-migration accounting: completed migrations, rolled-back attempts,
+    # and the measured serving pause (admission-closed to admission-reopened)
+    # per completed migration — the zero-downtime budget the migration bench
+    # gates on
+    n_migrations: int = 0
+    n_migration_rollbacks: int = 0
+    migration_pauses_ms: Deque[float] = field(
+        default_factory=lambda: deque(maxlen=1024), repr=False)
 
     def record_decisions(self, n: int, n_hard: int) -> None:
         self.n_stage1_batches += 1
@@ -161,6 +203,26 @@ class ServeStats:
 
     def record_submit(self, sample_id: int, t: float) -> None:
         self.submit_times[sample_id] = t
+
+    def record_migration(self, pause_ms: float) -> None:
+        self.n_migrations += 1
+        self.migration_pauses_ms.append(float(pause_ms))
+
+    def record_migration_rollback(self) -> None:
+        self.n_migration_rollbacks += 1
+
+    def _pause_pct(self, pct: float) -> float:
+        if not self.migration_pauses_ms:
+            return 0.0
+        return float(np.percentile(np.asarray(self.migration_pauses_ms), pct))
+
+    @property
+    def migration_pause_p50_ms(self) -> float:
+        return self._pause_pct(50.0)
+
+    @property
+    def migration_pause_p99_ms(self) -> float:
+        return self._pause_pct(99.0)
 
     def record_finish(self, sample_id: int, t: float) -> None:
         """Submit→finish wall latency; unmatched finishes are ignored so
@@ -246,6 +308,10 @@ class ServeStats:
                 "provisioned_p": self.provisioned_p,
                 "realized_q_ewma": self.realized_q_ewma,
                 "q_drift": self.q_drift,
+                "n_migrations": self.n_migrations,
+                "n_migration_rollbacks": self.n_migration_rollbacks,
+                "migration_pause_p50_ms": self.migration_pause_p50_ms,
+                "migration_pause_p99_ms": self.migration_pause_p99_ms,
                 "realized_q_series": list(self.realized_q_series)}
 
 
@@ -357,6 +423,7 @@ class RingQueue:
 
     def enqueue(self, slab_tree, slab_ids, n_hard: int,
                 drain_one: Callable[[], None]) -> None:
+        faults.fault_point("enqueue")
         slab_tree = self.ex.place_io(slab_tree)
         slab_ids = self.ex.place_io(slab_ids)
         if self._buf is None:
@@ -369,7 +436,16 @@ class RingQueue:
             free = self.size - self.count
             if free == 0:
                 self.stats.n_stalls += 1
-                drain_one()
+                before = self.count
+                # a transiently-failed drain retries with backoff; a drain
+                # that "succeeds" without freeing ring space would spin this
+                # stall loop forever, so no-progress is an error, not a hang
+                faults.retry(drain_one, what="backpressure-drain")
+                if self.count >= before:
+                    raise RuntimeError(
+                        "ring backpressure drain made no progress "
+                        f"(count {before} -> {self.count}) — stage-2 "
+                        "dispatch is stuck")
                 continue
             take = min(free, n_hard - off)
             self._buf = _ring_enqueue_range(self._buf, slab_tree, slab_ids,
@@ -630,10 +706,16 @@ class ContinuousScheduler:
 
     def __init__(self, fns, sc: ServeConfig, *, n_slots: int, max_len: int,
                  placement: Optional[StagePlacement] = None, clock=None,
-                 eager_drain_below: Optional[int] = None):
+                 eager_drain_below: Optional[int] = None,
+                 fns_factory: Optional[Callable] = None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         self.fns = fns
+        # fns_factory(placement) -> DecodeFns rebuilds the stage callables
+        # against a NEW placement (re-slicing params per ee.split_params
+        # onto its submeshes) — the hook live migration needs to perform a
+        # full chip re-split rather than only a capacity change
+        self.fns_factory = fns_factory
         self.sc = sc
         self.n_slots = n_slots
         self.max_len = max_len
@@ -641,6 +723,8 @@ class ContinuousScheduler:
         self.controller = None               # attached via controller.attach
         self.active_cap = n_slots            # live-slot occupancy cap
         self._pending_capacity: Optional[int] = None
+        self._pending_migration = None       # armed via request_migration
+        self._admission_open = True          # closed during QUIESCE
         # starvation-aware dispatch: a pool tick costs the same whether 2 or
         # n_slots rows are active, so once the ACTIVE count dips below this
         # threshold a partial bucket is worth its flush padding — stage-2
@@ -720,8 +804,34 @@ class ContinuousScheduler:
         # is never mutated); the buffer re-allocates lazily on next enqueue
         self.sc = ServeConfig(capacity=cap, queue_depth=self.sc.queue_depth,
                               c_thr=self.sc.c_thr,
-                              max_pending=self.sc.max_pending)
+                              max_pending=self.sc.max_pending,
+                              harvest_timeout_s=self.sc.harvest_timeout_s)
         self.ring = RingQueue(self.sc, self.ex2, self.stats)
+
+    def request_migration(self, plan) -> None:
+        """Arm a live migration (a ``runtime.migration.MigrationPlan``).
+        Like ``request_capacity`` it defers to a discrete point — the top
+        of the next loop iteration — where the migrator quiesces, snapshots,
+        re-places and resumes the pool; on failure it rolls back and
+        serving continues on the old placement. Arming again before the
+        previous plan ran replaces it (last writer wins)."""
+        self._pending_migration = plan
+
+    def _maybe_migrate(self) -> None:
+        if self._pending_migration is None:
+            return
+        plan, self._pending_migration = self._pending_migration, None
+        # lazy import: migration.py drives this scheduler (not vice versa)
+        from repro.runtime.migration import LiveMigrator, MigrationError
+        try:
+            LiveMigrator(self, plan).run()
+        except MigrationError:
+            # the migrator already rolled back to the pre-migration
+            # placement and re-opened admission; serving continues there.
+            # The attempt is visible in stats.n_migration_rollbacks and the
+            # fault log — nothing to re-raise: a failed RE-PLAN must not
+            # kill a healthy server.
+            pass
 
     # -- admission -----------------------------------------------------------
 
@@ -799,6 +909,8 @@ class ContinuousScheduler:
         batch sizes (bounded set of prefill shapes -> bounded compiles). A
         chunk is a same-prompt-length prefix of the admissible run, bounded
         by free slots AND the controller's live-occupancy cap."""
+        if not self._admission_open:          # QUIESCE: migration in flight
+            return
         while self._free and self.queue:
             busy = self.n_slots - len(self._free)
             headroom = min(len(self._free), self.active_cap - busy)
@@ -845,6 +957,10 @@ class ContinuousScheduler:
     # -- stage 2 dispatch ----------------------------------------------------
 
     def _dispatch_bucket(self) -> None:
+        # the injection boundary sits BEFORE the pop — a retried dispatch
+        # re-runs from an unmutated ring, so transient faults are safe to
+        # absorb with faults.retry at every call site
+        faults.fault_point("dispatch")
         popped = self.ring.pop()
         if popped is None:
             return
@@ -877,6 +993,16 @@ class ContinuousScheduler:
 
     def _harvest_one(self) -> None:
         entries, toks = self._pending.popleft()
+        # bounded wait: a bucket whose device result never resolves raises
+        # HarvestTimeout instead of blocking np.asarray forever — the
+        # entries go back on the pending deque so a caller that survives
+        # the error (or a later retry) still harvests every token
+        try:
+            bounded_wait(toks, self.sc.harvest_timeout_s,
+                         what=f"stage-2 bucket ({len(entries)} tokens)")
+        except HarvestTimeout:
+            self._pending.appendleft((entries, toks))
+            raise
         toks_np = np.asarray(toks)
         for j, (sid, idx) in enumerate(entries):
             self.results[sid][idx] = int(toks_np[j])
@@ -913,9 +1039,12 @@ class ContinuousScheduler:
             # hidden slab + step lane cross inside the enqueue's place_io
             slots2 = self.ex2.place_io(slots)
             cache_slab = _gather_rows(self._rows, slots2)
-            self.ring.enqueue({"h": slab, "cache": cache_slab,
-                               "step": steps}, slots2, n_hard,
-                              self._dispatch_bucket)
+            # retried: the enqueue fault boundary sits before any ring
+            # mutation, so a transient failure re-runs the whole enqueue
+            faults.retry(self.ring.enqueue,
+                         {"h": slab, "cache": cache_slab, "step": steps},
+                         slots2, n_hard, self._dispatch_bucket,
+                         what="ring-enqueue")
 
     # -- the loop ------------------------------------------------------------
 
@@ -928,18 +1057,20 @@ class ContinuousScheduler:
         only when nothing else can make progress (all busy slots parked) —
         the HAPI-style staged policy."""
         while True:
-            self._maybe_apply_capacity()     # discrete re-plan point only
+            self._maybe_migrate()            # discrete re-plan points only
+            self._maybe_apply_capacity()
             self._try_admit()
             if self._n_state(_ACTIVE) > 0:
                 self._tick()
                 while self.ring.count >= self.sc.capacity:
-                    self._dispatch_bucket()
+                    faults.retry(self._dispatch_bucket, what="full-drain")
                 # starved pool: partial buckets beat idle stage-1 width
                 while (self.ring.count > 0
                        and self._n_state(_ACTIVE) < self.eager_drain_below):
-                    self._dispatch_bucket()
+                    faults.retry(self._dispatch_bucket, what="eager-drain")
             elif self.ring.count > 0:
-                self._dispatch_bucket()      # forced partial: all parked
+                # forced partial: all parked
+                faults.retry(self._dispatch_bucket, what="forced-drain")
             elif self.queue:
                 if not self._free:           # full pool, all parked, empty
                     raise AssertionError("scheduler wedged: parked slots "

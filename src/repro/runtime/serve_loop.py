@@ -106,9 +106,9 @@ from repro.runtime.stage_executor import StagePlacement
 # the scheduler module owns the shared serving substrate; re-exported names
 # keep this module the one import site for serving callers and tests
 from repro.runtime.scheduler import (  # noqa: F401  (re-exports)
-    ContinuousScheduler, Request, RingQueue, ServeConfig, ServeStats,
-    SyncScheduler, _gather_rows, _ring_enqueue_range, _scatter_rows,
-    ring_drain, ring_enqueue, ring_init)
+    ContinuousScheduler, HarvestTimeout, Request, RingQueue, ServeConfig,
+    ServeStats, SyncScheduler, _gather_rows, _ring_enqueue_range,
+    _scatter_rows, bounded_wait, ring_drain, ring_enqueue, ring_init)
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))
@@ -750,10 +750,18 @@ def build_continuous_scheduler(params, cfg: ArchConfig,
     slots advancing through stage 1 every tick while hard tokens wait in the
     ring for bucketed stage-2 dispatch (``runtime/scheduler.py``).
     ``max_len`` bounds every request's prompt + generation length (the
-    pool's shared cache width)."""
+    pool's shared cache width).
+
+    The attached ``fns_factory`` closes over (params, cfg, spec): it is the
+    hook live migration (``runtime/migration.py``) uses to rebuild the
+    stage callables — re-slicing params per ``ee.split_params`` — against a
+    NEW placement when the controller applies a full chip re-split or a
+    device loss degrades the mesh."""
     return ContinuousScheduler(decode_stage_fns(params, cfg, spec, placement),
                                sc, n_slots=n_slots, max_len=max_len,
-                               placement=placement, clock=clock)
+                               placement=placement, clock=clock,
+                               fns_factory=lambda pl: decode_stage_fns(
+                                   params, cfg, spec, pl))
 
 
 def build_sync_scheduler(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,

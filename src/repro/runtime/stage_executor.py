@@ -34,6 +34,7 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.stage_mesh import StageMeshPlan, make_stage_meshes
+from repro.runtime import faults
 
 
 class StageExecutor:
@@ -87,6 +88,19 @@ class StageExecutor:
 
     # -- placement / transfer ------------------------------------------------
 
+    def _transfer(self, tree, shard_of):
+        """The one stage-boundary transfer path: a named ``transfer`` fault
+        point followed by the ``jax.device_put``, retried with backoff so a
+        transient hop failure never surfaces to the request stream. The
+        fault point sits INSIDE the retried call — device_put is free of
+        side effects until it returns, so a retried transfer re-runs
+        cleanly."""
+        def hop():
+            faults.fault_point("transfer")
+            return jax.tree.map(
+                lambda x: jax.device_put(x, shard_of(x)), tree)
+        return faults.retry(hop, what=f"transfer:{self.name}")
+
     def place(self, tree, spec: P = P()):
         """Commit a pytree onto this stage (replicated by default). Cross-
         executor calls ARE the stage-boundary transfer: ``jax.device_put``
@@ -94,7 +108,8 @@ class StageExecutor:
         device. Degenerate executors return the tree untouched."""
         if self.mesh is None:
             return tree
-        return jax.device_put(tree, self.sharding(spec))
+        sh = self.sharding(spec)
+        return self._transfer(tree, lambda x: sh)
 
     def place_io(self, tree):
         """Commit batch-leading IO tensors (tokens, id lanes, slabs, ring
@@ -103,11 +118,10 @@ class StageExecutor:
         replicates while the request batch shards."""
         if self.mesh is None:
             return tree
-        return jax.tree.map(
-            lambda x: jax.device_put(
-                x, self.sharding(
-                    self._io_spec(x.shape[0]) if np.ndim(x) else P())),
-            tree)
+        return self._transfer(
+            tree,
+            lambda x: self.sharding(
+                self._io_spec(x.shape[0]) if np.ndim(x) else P()))
 
 
 class StagePlacement:

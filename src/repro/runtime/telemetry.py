@@ -22,11 +22,19 @@ module owns the filtered views of the serving signals the controller
     visits, so actuation decisions see the RECENT regime rather than
     lifetime averages that an old regime dominates.
 
+  * ``EventLog`` — a bounded, monotonically-sequenced structured event
+    buffer for control-plane occurrences that are *discrete* rather than
+    windowed: fault injections, retries, migration stage transitions,
+    rollbacks. The fault layer (``runtime/faults.py``) and the migrator
+    (``runtime/migration.py``) both write here; the CI chaos job flushes
+    it as the fault-log artifact.
+
 Everything here is host-side numpy over scalars the hot loops already
 sync; sensing adds no device round-trips of its own.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from typing import Deque, Iterable, Optional
 
@@ -86,6 +94,44 @@ class ConfidenceReservoir:
         return np.asarray(self._buf, np.float32)
 
     def clear(self) -> None:
+        self._buf.clear()
+
+
+class EventLog:
+    """Bounded structured event buffer (FIFO overwrite past ``cap``).
+
+    Each event is a dict with a monotonically increasing ``seq``, a wall
+    timestamp ``t``, an ``event`` tag, and arbitrary keyword fields. The
+    sequence number keeps ordering meaningful even after old events fall
+    off the deque, and survives ``clear()`` so flushed chunks of one
+    process's log never renumber.
+    """
+
+    def __init__(self, cap: int = 1024):
+        if cap < 1:
+            raise ValueError(f"event log cap must be >= 1, got {cap}")
+        self.cap = cap
+        self._buf: Deque[dict] = deque(maxlen=cap)
+        self._seq = 0
+
+    def emit(self, event: str, **fields) -> dict:
+        self._seq += 1
+        ev = {"seq": self._seq, "t": time.time(), "event": event, **fields}
+        self._buf.append(ev)
+        return ev
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def as_list(self) -> list:
+        """Snapshot of the retained events, oldest first."""
+        return list(self._buf)
+
+    def tail(self, n: int = 10) -> list:
+        return list(self._buf)[-n:]
+
+    def clear(self) -> None:
+        """Drop retained events (``seq`` keeps counting)."""
         self._buf.clear()
 
 

@@ -1,0 +1,92 @@
+"""Checkpoint crash safety: the commit-marker protocol under simulated
+crashes (via the ckpt fault points), keep-retention GC, and rejection of
+partial/uncommitted checkpoints on restore."""
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.runtime import faults
+
+
+def _tree(step=0):
+    return {"w": jnp.arange(6.0).reshape(2, 3) + step,
+            "b": {"x": jnp.ones(4) * step}}
+
+
+def test_crash_between_rename_and_commit(tmp_path):
+    """A crash after the rename but before the marker leaves a fully
+    written yet UNCOMMITTED directory: restore refuses it, latest_step
+    ignores it, and a re-save recovers cleanly."""
+    d = str(tmp_path)
+    with faults.installed(faults.FaultPlan.parse("ckpt:precommit@1")):
+        with pytest.raises(faults.InjectedFault):
+            ckpt.save(d, 3, _tree())
+        # the directory exists with every leaf on disk — but no marker
+        assert os.path.isdir(os.path.join(d, "step_3"))
+        assert os.path.exists(os.path.join(d, "step_3", "manifest.json"))
+        assert not os.path.exists(os.path.join(d, "step_3", "COMMITTED"))
+        with pytest.raises(FileNotFoundError, match="no committed"):
+            ckpt.restore(d, 3, _tree())
+        assert ckpt.latest_step(d) is None
+        # retry (the fault was consumed): commit lands, restore round-trips
+        ckpt.save(d, 3, _tree())
+    assert ckpt.latest_step(d) == 3
+    out = ckpt.restore(d, 3, _tree())
+    assert np.array_equal(out["w"], np.asarray(_tree()["w"]))
+
+
+def test_crash_mid_leaf_write_leaves_only_tmp(tmp_path):
+    """A writer dying mid-leaf leaves only the .tmp staging dir — nothing
+    restorable, and gc_old sweeps the debris."""
+    d = str(tmp_path)
+    with faults.installed(faults.FaultPlan.parse("ckpt:leaf@2")):
+        with pytest.raises(faults.InjectedFault):
+            ckpt.save(d, 5, _tree())
+    assert os.path.isdir(os.path.join(d, "step_5.tmp"))
+    assert not os.path.isdir(os.path.join(d, "step_5"))
+    assert ckpt.latest_step(d) is None
+    ckpt.gc_old(d, keep=3)
+    assert not os.path.isdir(os.path.join(d, "step_5.tmp"))
+
+
+def test_keep_retention_gc(tmp_path):
+    d = str(tmp_path)
+    with faults.installed(None):
+        for s in range(5):
+            ckpt.save(d, s, _tree(s))
+    ckpt.gc_old(d, keep=2)
+    kept = sorted(int(n.split("_")[1]) for n in os.listdir(d)
+                  if not n.endswith(".tmp"))
+    assert kept == [3, 4]
+    assert ckpt.latest_step(d) == 4
+    out = ckpt.restore(d, 3, _tree())
+    assert np.array_equal(out["w"], np.asarray(_tree(3)["w"]))
+
+
+def test_restore_from_partial_rejected(tmp_path):
+    """A committed checkpoint with a leaf deleted out from under it (torn
+    storage) fails loudly on the missing file, never silently zero-fills."""
+    d = str(tmp_path)
+    with faults.installed(None):
+        ckpt.save(d, 1, _tree())
+    victim = next(f for f in os.listdir(os.path.join(d, "step_1"))
+                  if f.endswith(".npy"))
+    os.remove(os.path.join(d, "step_1", victim))
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(d, 1, _tree())
+
+
+def test_async_checkpointer_surfaces_crash(tmp_path):
+    """A fault on the background writer thread resurfaces on wait() —
+    a crashed async save is never silent."""
+    d = str(tmp_path)
+    cp = ckpt.AsyncCheckpointer(d, keep=2)
+    with faults.installed(faults.FaultPlan.parse("ckpt:precommit@1")):
+        cp.save_async(7, _tree())
+        with pytest.raises(faults.InjectedFault):
+            cp.wait()
+    assert ckpt.latest_step(d) is None

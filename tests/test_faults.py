@@ -1,0 +1,218 @@
+"""Fault-injection layer: plan parsing, fault-point semantics, retry with
+backoff, the bounded-wait harvest, and the ring's no-progress guard."""
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime import faults
+from repro.runtime import scheduler as S
+from repro.runtime.scheduler import (HarvestTimeout, RingQueue, ServeConfig,
+                                     ServeStats, bounded_wait)
+from repro.runtime.stage_executor import StageExecutor
+from repro.runtime.telemetry import EventLog
+
+
+# ---------------------------------------------------------------------------
+# plan parsing / round-trip
+# ---------------------------------------------------------------------------
+
+def test_plan_parse_roundtrip():
+    spec = "dispatch@3;migrate:replace@1#transient,transfer@2"
+    p = faults.FaultPlan.parse(spec)
+    assert p.triggers == {"dispatch": [(3, "fatal")],
+                          "migrate:replace": [(1, "transient")],
+                          "transfer": [(2, "fatal")]}
+    assert faults.FaultPlan.parse(p.spec()).triggers == p.triggers
+
+
+@pytest.mark.parametrize("bad", ["dispatch", "dispatch@x", "dispatch@0",
+                                 "dispatch@2#bogus", "@3"])
+def test_plan_parse_rejects(bad):
+    with pytest.raises(ValueError):
+        faults.FaultPlan.parse(bad)
+
+
+def test_plan_parse_empty_and_whitespace():
+    assert faults.FaultPlan.parse("").triggers == {}
+    assert faults.FaultPlan.parse(" ; , ").triggers == {}
+
+
+def test_seeded_plan_deterministic():
+    a = faults.FaultPlan.seeded(7, n_faults=3)
+    b = faults.FaultPlan.seeded(7, n_faults=3)
+    assert a.triggers == b.triggers
+    assert all(pt in faults.POINTS for pt in a.triggers)
+
+
+# ---------------------------------------------------------------------------
+# fault-point firing semantics
+# ---------------------------------------------------------------------------
+
+def test_fault_point_fires_on_nth_visit_once():
+    with faults.installed(faults.FaultPlan.parse("x@2#transient")):
+        faults.fault_point("x")                     # visit 1: armed, silent
+        with pytest.raises(faults.InjectedFault) as ei:
+            faults.fault_point("x")                 # visit 2: fires
+        assert ei.value.point == "x" and ei.value.transient
+        faults.fault_point("x")                     # visit 3: consumed
+
+
+def test_installed_none_muffles_and_restores():
+    outer = faults.FaultPlan.parse("y@1")
+    with faults.installed(outer):
+        with faults.installed(None):
+            faults.fault_point("y")                 # muffled
+        with pytest.raises(faults.InjectedFault):
+            faults.fault_point("y")                 # outer plan restored
+
+
+def test_fatal_default_kind():
+    with faults.installed(faults.FaultPlan.parse("z@1")):
+        with pytest.raises(faults.InjectedFault) as ei:
+            faults.fault_point("z")
+        assert not ei.value.transient
+        assert not faults.is_transient(ei.value)
+        assert not faults.is_transient(ValueError("no"))
+        assert faults.is_transient(
+            faults.InjectedFault("z", transient=True))
+
+
+# ---------------------------------------------------------------------------
+# retry with backoff
+# ---------------------------------------------------------------------------
+
+def test_retry_absorbs_transient_within_budget():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise faults.InjectedFault("t", transient=True)
+        return "ok"
+
+    assert faults.retry(flaky) == "ok"
+    assert len(calls) == 3
+
+
+def test_retry_exhausts_then_raises():
+    def always():
+        raise faults.InjectedFault("t", transient=True)
+
+    with pytest.raises(faults.InjectedFault):
+        faults.retry(always, retries=2, base_delay=1e-4)
+
+
+def test_retry_never_masks_fatal():
+    calls = []
+
+    def fatal():
+        calls.append(1)
+        raise ValueError("real bug")
+
+    with pytest.raises(ValueError):
+        faults.retry(fatal)
+    assert len(calls) == 1                          # no retry on non-transient
+
+
+def test_event_log_bounded_and_sequenced():
+    log = EventLog(cap=4)
+    for i in range(10):
+        log.emit("e", i=i)
+    evs = log.as_list()
+    assert len(evs) == 4
+    assert [e["seq"] for e in evs] == [7, 8, 9, 10]
+    log.clear()
+    assert log.emit("f")["seq"] == 11               # seq survives clear
+
+
+def test_flush_log_writes_jsonl(tmp_path):
+    with faults.installed(faults.FaultPlan.parse("w@1")):
+        with pytest.raises(faults.InjectedFault):
+            faults.fault_point("w")
+        path = tmp_path / "fault_log.jsonl"
+        out = faults.flush_log(str(path))
+    assert out == str(path)
+    lines = path.read_text().strip().splitlines()
+    assert lines and '"inject"' in lines[-1] and '"w@1"' in lines[-1]
+
+
+# ---------------------------------------------------------------------------
+# bounded-wait harvest (satellite 1)
+# ---------------------------------------------------------------------------
+
+class _NeverReady:
+    """A device-result stand-in whose transfer never completes."""
+
+    def is_ready(self):
+        return False
+
+
+def test_bounded_wait_passes_ready_results():
+    x = jnp.arange(4)
+    jax.block_until_ready(x)
+    assert bounded_wait(x, 0.5, what="x") is x
+    # numpy / scalar leaves are trivially ready
+    assert bounded_wait({"a": np.zeros(3), "b": 1.0}, 0.01) is not None
+
+
+def test_bounded_wait_raises_on_stuck_result():
+    t0 = time.perf_counter()
+    with pytest.raises(HarvestTimeout, match="stuck-bucket"):
+        bounded_wait(_NeverReady(), 0.05, what="stuck-bucket")
+    assert time.perf_counter() - t0 < 5.0           # bounded, not a hang
+
+
+def test_bounded_wait_none_timeout_is_native():
+    assert bounded_wait(jnp.zeros(2), None) is not None
+
+
+def test_harvest_timeout_surfaces_and_preserves_pending():
+    """A stuck pending bucket raises HarvestTimeout out of the hot loop and
+    leaves the entry on the pending deque (nothing silently dropped)."""
+    sched = object.__new__(S.ContinuousScheduler)
+    sched.sc = ServeConfig(capacity=2, harvest_timeout_s=0.05)
+    sched._pending = S.deque([(([1, 0],), _NeverReady())])
+    sched.results = {}
+    with pytest.raises(HarvestTimeout):
+        sched._harvest_one()
+    assert len(sched._pending) == 1                 # restored, not dropped
+
+
+# ---------------------------------------------------------------------------
+# ring backpressure: retried drain + no-progress guard
+# ---------------------------------------------------------------------------
+
+def _full_ring():
+    sc = ServeConfig(capacity=2, queue_depth=1)     # ring size 2
+    rq = RingQueue(sc, StageExecutor(), ServeStats())
+    slab = {"h": jnp.arange(4.0).reshape(2, 2)}
+    ids = jnp.asarray([0, 1], jnp.int32)
+    rq.enqueue(slab, ids, 2, lambda: None)          # fills the ring exactly
+    return rq, slab, ids
+
+
+def test_ring_stall_drain_no_progress_raises():
+    with faults.installed(None):
+        rq, slab, ids = _full_ring()
+        with pytest.raises(RuntimeError, match="no progress"):
+            rq.enqueue(slab, ids, 2, lambda: None)  # drain frees nothing
+
+
+def test_ring_stall_drain_transient_fault_survives():
+    with faults.installed(faults.FaultPlan.parse("drainpt@1#transient")):
+        rq, slab, ids = _full_ring()
+        drains = []
+
+        def drain_one():
+            faults.fault_point("drainpt")           # 1st call: transient
+            popped = rq.pop()
+            assert popped is not None
+            drains.append(popped[2])
+
+        rq.enqueue(slab, ids, 2, drain_one)
+        assert drains == [2]                        # retried, then drained
+        assert rq.count == 2
