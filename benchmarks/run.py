@@ -34,10 +34,10 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (fig9_tap, roofline, serve_continuous,
-                            serve_decode, serve_drift, serve_migration,
-                            serve_pipeline, table1_resources,
-                            table2_overhead, table3_throughput,
-                            table4_networks)
+                            serve_decode, serve_drift, serve_fleet,
+                            serve_migration, serve_pipeline,
+                            table1_resources, table2_overhead,
+                            table3_throughput, table4_networks)
     seeds = 1 if args.fast else 3
     benches = [
         ("fig9_tap", lambda: fig9_tap.run(n_seeds=seeds)),
@@ -51,6 +51,7 @@ def main(argv=None) -> int:
         ("serve_continuous", lambda: serve_continuous.run(fast=args.fast)),
         ("serve_drift", lambda: serve_drift.run(fast=args.fast)),
         ("serve_migration", lambda: serve_migration.run(fast=args.fast)),
+        ("serve_fleet", lambda: serve_fleet.run(fast=args.fast)),
     ]
     if args.only and args.only not in {n for n, _ in benches}:
         ap.error(f"unknown benchmark {args.only!r}; "

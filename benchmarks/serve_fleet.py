@@ -1,0 +1,272 @@
+"""Fleet routing under bimodal-difficulty tenant traffic: drift-aware
+routing vs round-robin over provisioning-asymmetric replicas.
+
+ATHEENA's principle — provision hardware to the exit probability p of the
+traffic a section actually sees — extends to fleet routing: the router
+should SHAPE per-replica traffic so each replica's provisioning stays
+matched to its realized hard rate. This benchmark builds a 2-replica
+fleet with deliberately asymmetric provisioning (an exit-heavy replica
+whose stage-2 bucket is sized for p≈0.1, and a fat replica sized for
+p≈0.85) and a bimodal tenant mix (an easy tenant whose requests nearly
+always exit at stage 1, and a hard tenant whose requests nearly always
+fall through). The workload rides ``serve_drift``'s analytic ``DecodeFns``
+(deterministic confidences + real matmul burn), so misrouting has a real
+wall cost: hard traffic on the small-bucket replica degenerates into
+per-token bucket dispatches and ring backpressure stalls.
+
+Two timed passes per iteration over the SAME trace (fresh fleet each):
+
+  * **round_robin**  — the policy-blind baseline;
+  * **drift_aware**  — the router learns each tenant's difficulty from the
+    replicas' finish feeds and steers by |d̂ − p| plus the replica's
+    realized-q saturation penalty.
+
+An untimed correctness pass exercises the rest of the fleet contract:
+per-sample token streams exactly equal to a single-scheduler oracle run
+(and to the analytic stream), zero drops/dups under SLO preemption
+(a mid-trace burst of gold-class traffic displaces queued batch-class
+requests back into the router) and one forced mid-trace replica degrade
+(queued requests revoked and redistributed; in-flight work drains).
+
+Gated metrics (``benchmarks/compare.py`` vs ``baseline_cpu.json``):
+
+  * ``drift_aware_vs_rr_goodput_ratio`` — median paired ratio, hard
+    ``min`` 1.1;
+  * ``fleet_equivalence`` / ``degrade_equivalence`` — exact-stream
+    booleans;
+  * ``preemption_exercised`` — the preemption path actually ran;
+  * ``dropped_requests`` — hard-capped at 0 (re-queued, never dropped).
+
+Run via ``PYTHONPATH=src python -m benchmarks.run --only serve_fleet
+[--json]``.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import table
+from benchmarks.serve_drift import _S, drift_fns, token_of
+from repro.runtime import serve_loop as SL
+from repro.runtime.router import FleetRouter
+from repro.runtime.scheduler import (Clock, ContinuousScheduler, Request,
+                                     poisson_arrivals)
+
+# the bimodal tenant mix: confidences sit at difficulty ± 0.09 jitter, so
+# against C_THR the easy tenant's hard rate is ~0.11 and the hard
+# tenant's ~0.89 — the two provisioning points the replicas are sized for
+C_THR = 0.55
+EASY_DIFF, HARD_DIFF = 0.62, 0.48
+P_EXIT_HEAVY, P_FAT = 0.12, 0.85
+
+# provisioning asymmetry, ATHEENA-style: stage-2 hardware scales with the
+# provisioned p, so the exit-heavy replica's stage-2 is SLOW per row (few
+# chips — emulated as more matmul burn) with a 1-row bucket, while the fat
+# replica's stage-2 is fast per row with a full-width bucket. Misrouted
+# hard traffic pays the slow stage 2 AND per-token dispatch overhead.
+_D_MODEL = 256
+_BURN2_EXIT_HEAVY, _BURN2_FAT = 48, 6
+
+
+def _tenant_of(sid: int) -> str:
+    """Hash-mixed tenant assignment (~50/50): a strict even/odd interleave
+    would let a 2-replica round-robin luck into the perfect split by
+    parity — the mix must be irregular for the baseline to be honest."""
+    return "easy" if (sid * 2654435761) % 97 < 49 else "hard"
+
+
+def _difficulty(n: int) -> np.ndarray:
+    return np.asarray([EASY_DIFF if _tenant_of(i) == "easy" else HARD_DIFF
+                       for i in range(n)], np.float32)
+
+
+def _requests(n: int, n_tokens: int, slo: str = "standard",
+              arrivals=None) -> List[Request]:
+    return [Request(sample_id=i, prompt=np.full((_S,), i, np.int32),
+                    n_tokens=n_tokens, tenant=_tenant_of(i), slo_class=slo,
+                    arrival_time=(0.0 if arrivals is None
+                                  else float(arrivals[i])))
+            for i in range(n)]
+
+
+def _expected(sids, n_tokens: int) -> dict:
+    return {i: [token_of(i, t) for t in range(n_tokens)] for i in sids}
+
+
+def _fleet(fns_pair, n_slots: int, max_len: int, policy: str,
+           max_queue: int = 4) -> FleetRouter:
+    """A fresh 2-replica fleet: replica 0 exit-heavy (bucket sized for
+    p=0.12 -> capacity 1 at 6 slots, slow per-row stage 2), replica 1 fat
+    (p=0.85 -> capacity 6, fast stage 2). One shared clock; a bounded
+    per-replica router queue keeps admission incremental, so the
+    drift_aware policy routes most requests AFTER the tenant difficulty
+    estimates have converged from early finishes."""
+    clock = Clock()
+    caps = [max(1, int(np.ceil(p * n_slots))) for p in (P_EXIT_HEAVY, P_FAT)]
+    replicas = [
+        ContinuousScheduler(fns, SL.ServeConfig(capacity=c, queue_depth=4,
+                                                c_thr=C_THR),
+                            n_slots=n_slots, max_len=max_len, clock=clock)
+        for fns, c in zip(fns_pair, caps)]
+    return FleetRouter(replicas, policy=policy,
+                       provisioned_p=[P_EXIT_HEAVY, P_FAT],
+                       max_queue_per_replica=max_queue)
+
+
+def _one_pass(fns_pair, n: int, n_tokens: int, n_slots: int, max_len: int,
+              policy: str, arrivals=None):
+    """One timed pass: goodput (tok/s) + the router, streams asserted
+    against the analytic oracle. With a two-phase ``arrivals`` trace the
+    goodput is measured over the BURST phase only (tokens of
+    burst-arrival requests / wall from burst start to drain): the paced
+    learning phase is deliberately low-occupancy, so folding it in would
+    measure pacing, not routing."""
+    router = _fleet(fns_pair, n_slots, max_len, policy)
+    for r in _requests(n, n_tokens, arrivals=arrivals):
+        router.submit(r)
+    results = router.run()
+    makespan = router.clock.now()
+    assert results == _expected(range(n), n_tokens), \
+        f"{policy}: fleet token streams diverged from the analytic oracle"
+    if arrivals is None:
+        n_tok = sum(len(v) for v in results.values())
+        return n_tok / makespan, router
+    t_burst = float(arrivals[-1])
+    n_burst = int(np.sum(np.asarray(arrivals) >= t_burst))
+    return n_burst * n_tokens / (makespan - t_burst), router
+
+
+def _oracle_results(fns, n: int, n_tokens: int, n_slots: int,
+                    max_len: int) -> dict:
+    """The single-scheduler oracle: the same requests through ONE
+    continuous scheduler — the reference the fleet must match exactly."""
+    sched = ContinuousScheduler(
+        fns, SL.ServeConfig(capacity=max(1, n_slots // 2), queue_depth=4,
+                            c_thr=C_THR),
+        n_slots=2 * n_slots, max_len=max_len)
+    for r in _requests(n, n_tokens):
+        sched.submit(r)
+    return sched.run()
+
+
+def _chaos_pass(fns_pair, n: int, n_tokens: int, n_slots: int,
+                max_len: int):
+    """The untimed contract pass: batch-class flood, mid-trace gold burst
+    (forces preemption of queued batch requests), one forced replica
+    degrade (forces queue redistribution). Returns (results, router)."""
+    router = _fleet(fns_pair, n_slots, max_len, "drift_aware", max_queue=1)
+    n_gold = max(2, n // 4)
+    batch_reqs = _requests(n, n_tokens, slo="batch")[n_gold:]
+    gold_reqs = _requests(n, n_tokens, slo="gold")[:n_gold]
+    for r in batch_reqs:
+        router.submit(r)
+    # fill pools and queues with batch traffic before gold arrives —
+    # but stop BEFORE the first finish (a request needs n_tokens ticks),
+    # so the replica queues still hold unadmitted batch victims
+    for _ in range(min(n_tokens - 2, 4 + 2 * n_slots)):
+        if router.step() == "idle":
+            break
+    for r in gold_reqs:                      # the high-priority burst
+        router.submit(r)
+    for _ in range(3):
+        router.step()
+    router.degrade_replica(0)                # mid-trace replica loss
+    results = router.run()
+    return results, router
+
+
+def run(fast: bool = False, iters: Optional[int] = None) -> dict:
+    if fast:
+        n, n_tokens, n_slots = 48, 10, 6
+    else:
+        n, n_tokens, n_slots = 80, 14, 6
+    iters = iters if iters is not None else (2 if fast else 3)
+    max_len = _S + n_tokens
+    diff = _difficulty(n)
+    fns_pair = (drift_fns(diff, d_model=_D_MODEL,
+                          burn2=_BURN2_EXIT_HEAVY),
+                drift_fns(diff, d_model=_D_MODEL, burn2=_BURN2_FAT))
+
+    # warmup compiles every program (fns shared across passes => shared
+    # jit caches) and measures the closed-loop service rate
+    warm_g = min(_one_pass(fns_pair, n, n_tokens, n_slots, max_len, p)[0]
+                 for p in ("round_robin", "drift_aware"))
+    # two-phase trace, identical for both policies: the first quarter
+    # arrives paced (~50% of the measured service rate), so early
+    # finishes teach the router each tenant's difficulty while the fleet
+    # is live; the rest arrives as one burst, so the bulk of the trace is
+    # CAPACITY-bound — goodput then measures how well each policy matches
+    # traffic to provisioning, not the arrival rate (machine-adaptive
+    # pacing keeps the regime comparable across hosts)
+    n_pace = max(n_slots + 2, n // 6)
+    paced = poisson_arrivals(n_pace, warm_g / n_tokens, seed=7)
+    arrivals = np.concatenate(
+        [paced, np.full(n - n_pace, float(paced[-1]), np.float64)])
+
+    ratios, best = [], {}
+    for _ in range(iters):
+        tps = {}
+        for policy in ("round_robin", "drift_aware"):
+            g, router = _one_pass(fns_pair, n, n_tokens, n_slots, max_len,
+                                  policy, arrivals=arrivals)
+            tps[policy] = g
+            if g > best.get(policy, (0.0, None))[0]:
+                best[policy] = (g, router)
+        ratios.append(tps["drift_aware"] / tps["round_robin"])
+    ratio = float(np.median(ratios))
+
+    oracle = _oracle_results(fns_pair[1], n, n_tokens, n_slots, max_len)
+    fleet_equivalence = best["drift_aware"][1].results == oracle
+
+    chaos_results, chaos_router = _chaos_pass(fns_pair, n, n_tokens,
+                                              n_slots, max_len)
+    cd = chaos_router.stats.as_dict()
+    degrade_equivalence = chaos_results == _expected(range(n), n_tokens)
+    preemption_exercised = cd["n_preemptions"] >= 1
+    dropped = cd["n_dropped"]
+
+    rows = []
+    for policy in ("round_robin", "drift_aware"):
+        g, router = best[policy]
+        d = router.stats.as_dict()
+        reps = d["replicas"]
+        rows.append([
+            policy, f"{g:,.0f}",
+            " / ".join(f"{r['realized_q']:.2f}" for r in reps),
+            " / ".join(str(r["n_stalls"]) for r in reps),
+            " / ".join(str(r["n_finished"]) for r in reps),
+        ])
+    txt = table(
+        f"Fleet routing: bimodal tenants over asymmetric replicas (N={n}, "
+        f"T={n_tokens}, slots={n_slots}/replica, p=[{P_EXIT_HEAVY}, "
+        f"{P_FAT}], backend={jax.default_backend()})",
+        ["policy", "goodput tok/s", "replica q", "stalls", "finished"],
+        rows)
+    txt += (f"\ndrift_aware/round_robin {ratio:.2f}x | fleet equiv "
+            f"{fleet_equivalence} | degrade equiv {degrade_equivalence} | "
+            f"preemptions {cd['n_preemptions']} | requeued "
+            f"{cd['n_requeued']} | dropped {dropped}")
+    return {
+        "text": txt,
+        "goodput_round_robin": best["round_robin"][0],
+        "goodput_drift_aware": best["drift_aware"][0],
+        "drift_aware_vs_rr_goodput_ratio": ratio,
+        "fleet_equivalence": bool(fleet_equivalence),
+        "degrade_equivalence": bool(degrade_equivalence),
+        "preemption_exercised": bool(preemption_exercised),
+        "n_preemptions": cd["n_preemptions"],
+        "n_requeued": cd["n_requeued"],
+        "dropped_requests": dropped,
+    }
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--iters", type=int, default=None)
+    a = ap.parse_args()
+    print(run(fast=a.fast, iters=a.iters)["text"])

@@ -47,7 +47,7 @@ print(f"robustness band: q=p-5% {d.throughput_at(args.p - 0.05):,.0f} | "
 
 # --- the design goes straight into the serving runtime -----------------------
 # StagePlacement.from_design carves disjoint (data, model) submeshes per the
-# plan above; runtime.serve_loop.build_server(..., placement) then runs
+# plan above; runtime.serve_api.build(..., placement=...) then runs
 # stage 1 and stage 2 on them with per-stage resident params.
 n_dev = jax.device_count()
 if n_dev >= plan.chips1 + plan.chips2:

@@ -50,8 +50,9 @@ print(f"calibrated C_thr={c_thr:.4f} for target p={args.target_p}")
 
 # --- size stage 2 and build the server --------------------------------------
 cap = stage2_capacity(args.batch, args.target_p)
-server = SL.build_server(params, cfg, spec,
-                         SL.ServeConfig(capacity=cap, c_thr=c_thr))
+server = SL.build(params, cfg, spec,
+                  SL.ServeConfig(capacity=cap, c_thr=c_thr),
+                  mode="prefill", scheduler=None)
 print(f"stage-2 bucket capacity {cap} (batch {args.batch})")
 
 # --- batched serving ---------------------------------------------------------

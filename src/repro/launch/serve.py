@@ -67,9 +67,11 @@ from repro.core.stage_mesh import StageMeshPlan, stage2_capacity
 from repro.launch.mesh import stage_submeshes
 from repro.launch.shardings import stage_io_shardable
 from repro.models.registry import get_arch, get_smoke, list_archs
+from repro.runtime import serve_api
 from repro.runtime import serve_loop as SL
 from repro.runtime.controller import ControllerConfig, DriftController
-from repro.runtime.scheduler import Request, poisson_arrivals
+from repro.runtime.router import ROUTING_POLICIES, FleetRouter
+from repro.runtime.scheduler import Clock, Request, poisson_arrivals
 from repro.runtime.stage_executor import StageExecutor, StagePlacement
 
 
@@ -102,6 +104,66 @@ def _summarized_stats(stats) -> dict:
     return d
 
 
+def _parse_tenant_slos(spec: Optional[str]) -> dict:
+    """'web=gold,offline=batch' -> {'web': 'gold', 'offline': 'batch'}."""
+    if not spec:
+        return {"default": "standard"}
+    out = {}
+    for pair in spec.split(","):
+        tenant, _, slo = pair.partition("=")
+        if not tenant or not slo:
+            raise SystemExit(f"--tenant-slos entry {pair!r} is not "
+                             f"tenant=slo_class")
+        out[tenant.strip()] = slo.strip()
+    return out
+
+
+def _serve_fleet(args, cfg, spec, params, sc, placement) -> int:
+    """Decode serving through a FleetRouter over --replicas continuous
+    schedulers sharing one clock; requests cycle over the --tenant-slos
+    tenants. Prints the FleetStats schema (per-replica ServeStats
+    embedded, q series summarized)."""
+    if args.scheduler != "continuous":
+        raise SystemExit("--replicas > 1 routes over continuous-scheduler "
+                         "replicas; pass --scheduler continuous")
+    tenant_slos = _parse_tenant_slos(args.tenant_slos)
+    tenants = list(tenant_slos)
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (args.requests, args.seq), 0, cfg.vocab))
+    max_len = args.seq + args.decode_tokens
+    clock = Clock()
+    replicas = [serve_api.build(params, cfg, spec, sc, mode="decode",
+                                scheduler="continuous", placement=placement,
+                                n_slots=args.batch, max_len=max_len,
+                                clock=clock)
+                for _ in range(args.replicas)]
+    router = FleetRouter(replicas, policy=args.routing_policy,
+                         provisioned_p=[args.p] * args.replicas)
+    arrivals = poisson_arrivals(args.requests, args.arrival_rate, seed=2)
+    for i in range(args.requests):
+        tenant = tenants[i % len(tenants)]
+        router.submit(Request(sample_id=i, prompt=prompts[i],
+                              n_tokens=args.decode_tokens,
+                              arrival_time=float(arrivals[i]),
+                              tenant=tenant,
+                              slo_class=tenant_slos[tenant]))
+    results = router.run()
+    makespan = router.clock.now()
+    assert len(results) == args.requests
+    assert all(len(v) == args.decode_tokens for v in results.values())
+    n_tok = sum(len(v) for v in results.values())
+    fleet = router.stats.as_dict()
+    fleet["replicas"] = [dict(r, realized_q_series_tail=r.pop(
+        "realized_q_series")[-8:]) for r in fleet["replicas"]]
+    payload = {"arch": args.arch, "mode": "decode", "scheduler": "fleet",
+               "routing_policy": args.routing_policy,
+               "n_replicas": args.replicas, "capacity": sc.capacity,
+               "n_slots": args.batch, "arrival_rate": args.arrival_rate,
+               "goodput_tokens_per_s": n_tok / makespan, **fleet}
+    print(json.dumps(payload, indent=1, default=float))
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b", choices=list_archs())
@@ -119,6 +181,22 @@ def main(argv=None) -> int:
                     help="decode scheduling policy: static batch formation "
                          "over the step-synchronous server, or the "
                          "slot-based continuous scheduler")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve decode through a FleetRouter over N "
+                         "replica schedulers (1 = single-replica, no "
+                         "router). Each replica gets its own scheduler; "
+                         "all share one clock")
+    ap.add_argument("--routing-policy", default="drift_aware",
+                    choices=ROUTING_POLICIES,
+                    help="fleet routing policy (--replicas > 1): "
+                         "round_robin, least_loaded (occupancy + queue "
+                         "depth), or drift_aware (match tenant difficulty "
+                         "to per-replica provisioned p vs realized q)")
+    ap.add_argument("--tenant-slos", default=None,
+                    help="comma-separated tenant=slo_class pairs (classes: "
+                         "gold/standard/batch), e.g. 'web=gold,batch=batch'."
+                         " Requests cycle over the listed tenants; default: "
+                         "one 'default' tenant at standard")
     ap.add_argument("--arrival-rate", type=float, default=float("inf"),
                     help="open-loop Poisson request rate (req/s) for decode "
                          "mode; inf = all requests arrive at t=0")
@@ -166,18 +244,17 @@ def main(argv=None) -> int:
                                    args.chips2)
         print(f"# {placement}")
 
+    if args.mode == "decode" and args.replicas > 1:
+        return _serve_fleet(args, cfg, spec, params, sc, placement)
+
     if args.mode == "decode":
         prompts = np.asarray(jax.random.randint(
             jax.random.PRNGKey(1), (args.requests, args.seq), 0, cfg.vocab))
         max_len = args.seq + args.decode_tokens
-        if args.scheduler == "continuous":
-            sched = SL.build_continuous_scheduler(
-                params, cfg, spec, sc, n_slots=args.batch, max_len=max_len,
-                placement=placement)
-        else:
-            sched = SL.build_sync_scheduler(params, cfg, spec, sc,
-                                            n_slots=args.batch,
-                                            placement=placement)
+        sched = serve_api.build(params, cfg, spec, sc, mode="decode",
+                                scheduler=args.scheduler,
+                                placement=placement, n_slots=args.batch,
+                                max_len=max_len)
         controller = None
         if args.controller:
             controller = DriftController(ControllerConfig(
@@ -212,7 +289,8 @@ def main(argv=None) -> int:
         print(json.dumps(payload, indent=1, default=float))
         return 0
 
-    server = SL.build_server(params, cfg, spec, sc, placement)
+    server = serve_api.build(params, cfg, spec, sc, mode="prefill",
+                             scheduler=None, placement=placement)
     toks = np.asarray(jax.random.randint(
         jax.random.PRNGKey(1), (args.requests, args.seq), 0, cfg.vocab))
     t0 = time.perf_counter()

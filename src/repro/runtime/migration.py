@@ -47,6 +47,7 @@ throughput instead of crashing the server.
 """
 from __future__ import annotations
 
+import copy
 import math
 import time
 from dataclasses import dataclass
@@ -108,9 +109,11 @@ _DEVICE_STATE: Tuple[Tuple[str, int, bool], ...] = (
     ("_c1", 1, False), ("_rows", 2, True),
 )
 
-# host-side mutable containers snapshotted by shallow copy
+# host-side mutable containers snapshotted by shallow copy (``queue`` is a
+# serve_api.RequestQueue, which defines ``__copy__`` to clone its deque +
+# sid set together)
 _HOST_STATE = ("_sid", "_emitted", "_budget", "_state", "_free",
-               "_parked_fifo", "_pending", "queue", "_queued", "results")
+               "_parked_fifo", "_pending", "queue", "results")
 
 
 class LiveMigrator:
@@ -161,7 +164,7 @@ class LiveMigrator:
             snap[attr] = getattr(s, attr)
         for attr in _HOST_STATE:
             val = getattr(s, attr)
-            snap[attr] = type(val)(val)      # shallow copy, same container
+            snap[attr] = copy.copy(val)      # shallow copy, same container
         for attr in ("fns", "placement", "ex1", "ex2", "sc", "ring",
                      "c_thr", "eager_drain_below", "active_cap"):
             snap[attr] = getattr(s, attr)

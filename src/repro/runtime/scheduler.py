@@ -67,6 +67,7 @@ import jax.numpy as jnp
 
 from repro.kernels import dispatch
 from repro.runtime import faults, telemetry
+from repro.runtime.serve_api import RequestQueue
 from repro.runtime.stage_executor import StagePlacement
 
 
@@ -151,7 +152,18 @@ class ServeStats:
     series (``telemetry.ewma`` — the ONE definition the controller and the
     drift benchmarks share) and ``q_drift`` its excursion from the
     provisioned p (0.0 until a controller / caller sets
-    ``provisioned_p``). Both ride in ``as_dict``."""
+    ``provisioned_p``). Both ride in ``as_dict``.
+
+    ``as_dict`` is a VERSIONED schema (``SCHEMA_VERSION``, emitted as the
+    ``schema_version`` key): the dict is consumed outside this process —
+    the serve CLI's JSON output, the benchmark payloads
+    ``benchmarks/compare.py`` gates against ``baseline_cpu.json``, and the
+    fleet ops surface (``FleetStats.as_dict`` embeds one per replica).
+    Fields accreted ad hoc across PRs 2-6; from v2 on, adding/removing/
+    renaming a key REQUIRES a version bump (and
+    ``tests/test_serve_api.py`` freezes the key set). The schema is
+    documented in README's "Serving stats schema" section."""
+    SCHEMA_VERSION = 2
     n_samples: int = 0
     n_decisions: int = 0
     n_exited: int = 0
@@ -292,7 +304,8 @@ class ServeStats:
         return self.n_decisions / max(self.n_samples, 1)
 
     def as_dict(self):
-        return {"n_samples": self.n_samples, "n_decisions": self.n_decisions,
+        return {"schema_version": self.SCHEMA_VERSION,
+                "n_samples": self.n_samples, "n_decisions": self.n_decisions,
                 "n_exited": self.n_exited, "n_stage2": self.n_stage2,
                 "n_stalls": self.n_stalls, "realized_q": self.realized_q,
                 "decisions_per_sample": self.decisions_per_sample,
@@ -501,11 +514,19 @@ def _scatter_rows(rows, bucket_rows, ids):
 class Request:
     """One decode request in the admission queue. ``arrival_time`` is in the
     scheduler clock's time base (seconds); a request is admissible once the
-    clock passes it — submit everything up front to replay a trace."""
+    clock passes it — submit everything up front to replay a trace.
+
+    ``tenant``/``slo_class`` identify who submitted and under which service
+    class — the fleet router (``runtime/router.py``) keys priority
+    admission, per-tenant budgets and difficulty estimates on them; a bare
+    scheduler ignores both (single-tenant serving is the degenerate
+    fleet)."""
     sample_id: int
     prompt: np.ndarray          # (S,) int32
     n_tokens: int               # total tokens to emit (incl. prefill token)
     arrival_time: float = 0.0
+    tenant: str = "default"
+    slo_class: str = "standard"
 
 
 class Clock:
@@ -740,8 +761,11 @@ class ContinuousScheduler:
         self.stats = ServeStats()
         self.stats.record_placement(self.placement)
         self.ring = RingQueue(sc, self.ex2, self.stats)
-        self.queue: Deque[Request] = deque()
-        self._queued: set = set()            # sids awaiting admission
+        # the transport-agnostic admission queue (runtime/serve_api.py):
+        # owns FIFO order, the queued-sid set, submit-side validation and
+        # the revocation primitive fleet preemption uses
+        self.queue: RequestQueue = RequestQueue(
+            max_len=max_len, is_dup=lambda sid: sid in self.results)
         self.results: Dict[int, List[int]] = {}
         # host-side slot metadata
         self._sid = [-1] * n_slots
@@ -750,6 +774,15 @@ class ContinuousScheduler:
         self._state = [_FREE] * n_slots
         self._free: List[int] = list(range(n_slots - 1, -1, -1))
         self.peak_busy = 0
+        # per-slot hardness tally (hard decisions / decisions of the
+        # resident request) and the per-request finish feed: (sid, n_hard,
+        # n_decisions) tuples appended at finish — the router's tenant-
+        # difficulty signal. Bounded like every other stats series; a
+        # standalone scheduler that never drains it just keeps the recent
+        # window.
+        self._slot_hard = [0] * n_slots
+        self._slot_dec = [0] * n_slots
+        self._finished: Deque = deque(maxlen=_SERIES_CAP)
         # parked slots in ring order (the compaction is contractually
         # stable, so ascending slot order per tick IS enqueue order) — lets
         # bucket results be harvested lazily: state transitions happen at
@@ -837,19 +870,10 @@ class ContinuousScheduler:
 
     def submit(self, req: Request) -> None:
         """Queue one request (arrival order = queue order; arrival_time
-        gates admissibility against the scheduler clock). Validation
-        happens HERE so a malformed request is rejected before it can
-        damage in-flight state mid-admission."""
-        if req.n_tokens < 1:
-            raise ValueError(f"n_tokens must be >= 1, got {req.n_tokens}")
-        if len(req.prompt) + req.n_tokens > self.max_len:
-            raise ValueError(
-                f"request {req.sample_id}: S + n_tokens = "
-                f"{len(req.prompt) + req.n_tokens} exceeds pool max_len "
-                f"{self.max_len}")
-        if req.sample_id in self.results or req.sample_id in self._queued:
-            raise ValueError(f"duplicate sample id {req.sample_id}")
-        self._queued.add(req.sample_id)
+        gates admissibility against the scheduler clock). Validation —
+        the shared ``serve_api.validate_request`` surface — happens at
+        the queue's push, so a malformed request is rejected before it
+        can damage in-flight state mid-admission."""
         self.queue.append(req)
 
     def _ensure_pool(self, c1_row, rows_row) -> None:
@@ -876,7 +900,6 @@ class ContinuousScheduler:
         prompts = np.stack([np.asarray(r.prompt, np.int32) for r in reqs])
         S = prompts.shape[1]
         for r in reqs:
-            self._queued.discard(r.sample_id)
             self.stats.n_samples += 1
             self.stats.record_submit(r.sample_id, r.arrival_time)
         logits0, caches = self.fns.prefill(
@@ -900,6 +923,8 @@ class ContinuousScheduler:
             self._emitted[slot] = 1
             self._budget[slot] = r.n_tokens
             self._state[slot] = _ACTIVE
+            self._slot_hard[slot] = 0
+            self._slot_dec[slot] = 0
             if r.n_tokens == 1:              # prefill-only: free right away
                 self._finish_slot(slot)
         self.peak_busy = max(self.peak_busy, self.n_slots - len(self._free))
@@ -932,13 +957,17 @@ class ContinuousScheduler:
     # -- emission / completion ----------------------------------------------
 
     def _finish_slot(self, slot: int) -> None:
-        """Free a slot whose request just emitted its last token and stamp
-        the request's finish time."""
+        """Free a slot whose request just emitted its last token, stamp
+        the request's finish time, and append it to the finish feed (sid +
+        its realized hardness tally — what ``drain_finished`` hands the
+        router)."""
         sid = self._sid[slot]
         self._state[slot] = _FREE
         self._sid[slot] = -1
         self._free.append(slot)
         self.stats.record_finish(sid, self.clock.now())
+        self._finished.append((sid, self._slot_hard[slot],
+                               self._slot_dec[slot]))
 
     def _advance_slot(self, slot: int) -> None:
         """One token emitted for this slot: finish when the budget is
@@ -1029,9 +1058,12 @@ class ContinuousScheduler:
             self.controller.on_tick(self, n_dec, n_hard,
                                     conf_np[easy_np | hard_np])
         for i in np.nonzero(easy_np)[0]:
+            self._slot_dec[int(i)] += 1
             self._emit(int(i), int(emit_np[i]))
         if n_hard > 0:
             for i in np.nonzero(hard_np)[0]:     # ascending = slab order
+                self._slot_dec[int(i)] += 1
+                self._slot_hard[int(i)] += 1
                 self._state[int(i)] = _PARKED
                 self._parked_fifo.append(int(i))
             # ex1 -> ex2 hop: the id lane crosses first (the cache gather
@@ -1051,38 +1083,94 @@ class ContinuousScheduler:
     def _n_state(self, state: int) -> int:
         return sum(1 for s in self._state if s == state)
 
-    def run(self) -> Dict[int, List[int]]:
-        """Drive the pool until the queue and every slot drain. Easy slots
-        advance every tick; full buckets dispatch eagerly; partial buckets
-        only when nothing else can make progress (all busy slots parked) —
-        the HAPI-style staged policy."""
+    # -- ReplicaHandle introspection (serve_api.py) --------------------------
+
+    @property
+    def n_busy(self) -> int:
+        """Slots holding an in-flight request (ACTIVE or PARKED) — the
+        live-occupancy half of the router's load signal."""
+        return self.n_slots - len(self._free)
+
+    @property
+    def queue_len(self) -> int:
+        """Unadmitted requests awaiting a slot — the queue-depth half."""
+        return len(self.queue)
+
+    def next_arrival(self) -> Optional[float]:
+        return self.queue.next_arrival()
+
+    def revoke_queued(self, sample_ids=None) -> List[Request]:
+        """Remove and return UNADMITTED queued requests (None = all) —
+        the fleet preemption / degrade-redistribution primitive. Admitted
+        requests are untouched, so a revoked request has never emitted a
+        token and re-queueing it elsewhere preserves its stream."""
+        return self.queue.revoke(sample_ids)
+
+    def drain_finished(self) -> List:
+        """Pop the per-request finish feed accumulated since the last
+        call: (sample_id, n_hard_decisions, n_decisions) per finished
+        request — the realized per-request hardness the router folds into
+        its tenant difficulty estimates."""
+        out = list(self._finished)
+        self._finished.clear()
+        return out
+
+    def step(self) -> str:
+        """ONE scheduler iteration — the replica state machine the fleet
+        router (and ``drain``) drives. Admits what is admissible, then
+        either ticks the pool (easy slots advance, full buckets dispatch
+        eagerly, partial buckets under the starvation policy) or forces a
+        partial bucket when every busy slot is parked — the HAPI-style
+        staged policy, one iteration at a time.
+
+        Returns ``"busy"`` (progressed), ``"waiting"`` (queued work whose
+        arrival_time is still in the future — the caller owns the clock
+        and should advance it toward ``next_arrival()``), or ``"idle"``
+        (queue and pool fully drained; deferred token values may still be
+        pending — ``drain`` harvests them)."""
+        self._maybe_migrate()                # discrete re-plan points only
+        self._maybe_apply_capacity()
+        self._try_admit()
+        if self._n_state(_ACTIVE) > 0:
+            self._tick()
+            while self.ring.count >= self.sc.capacity:
+                faults.retry(self._dispatch_bucket, what="full-drain")
+            # starved pool: partial buckets beat idle stage-1 width
+            while (self.ring.count > 0
+                   and self._n_state(_ACTIVE) < self.eager_drain_below):
+                faults.retry(self._dispatch_bucket, what="eager-drain")
+            return "busy"
+        if self.ring.count > 0:
+            # forced partial: all parked
+            faults.retry(self._dispatch_bucket, what="forced-drain")
+            return "busy"
+        if self.queue:
+            if not self._free:               # full pool, all parked, empty
+                raise AssertionError("scheduler wedged: parked slots "
+                                     "with an empty ring")
+            return "waiting"
+        return "idle"
+
+    def drain(self) -> Dict[int, List[int]]:
+        """Drive ``step`` until the queue and every slot drain (advancing
+        the clock over idle gaps), then harvest every deferred token
+        value. Idempotent: a drained scheduler returns its results."""
         while True:
-            self._maybe_migrate()            # discrete re-plan points only
-            self._maybe_apply_capacity()
-            self._try_admit()
-            if self._n_state(_ACTIVE) > 0:
-                self._tick()
-                while self.ring.count >= self.sc.capacity:
-                    faults.retry(self._dispatch_bucket, what="full-drain")
-                # starved pool: partial buckets beat idle stage-1 width
-                while (self.ring.count > 0
-                       and self._n_state(_ACTIVE) < self.eager_drain_below):
-                    faults.retry(self._dispatch_bucket, what="eager-drain")
-            elif self.ring.count > 0:
-                # forced partial: all parked
-                faults.retry(self._dispatch_bucket, what="forced-drain")
-            elif self.queue:
-                if not self._free:           # full pool, all parked, empty
-                    raise AssertionError("scheduler wedged: parked slots "
-                                         "with an empty ring")
-                self.clock.advance_to(self.queue[0].arrival_time)
-            else:
+            state = self.step()
+            if state == "waiting":
+                self.clock.advance_to(self.queue.next_arrival())
+            elif state == "idle":
                 break
         while self._pending:                 # final harvest: fill the
             self._harvest_one()              # deferred token values
         assert self._n_state(_FREE) == self.n_slots, \
             "scheduler drained with busy slots"
         return self.results
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drive the pool until the queue and every slot drain — the
+        standalone entry point (``drain`` under its original name)."""
+        return self.drain()
 
 
 # ---------------------------------------------------------------------------
@@ -1100,17 +1188,32 @@ class SyncScheduler:
     Prompts within a batch must share one length. A partial tail batch
     runs at its own (smaller) shape — one extra compile, but the stats
     (realized q, decisions, occupancy) count only real traffic, never
-    padding rows."""
+    padding rows.
 
-    def __init__(self, server, n_slots: int, clock=None):
+    Implements the same ``ReplicaHandle`` surface (``serve_api.py``) as
+    the continuous scheduler — shared submit-side validation (``max_len``
+    bounds requests only when given: the static-batch regime has no
+    pooled cache width), one ``step`` per static batch, the finish feed,
+    revocation — so a fleet router can mix sync and continuous replicas.
+    ``request_capacity`` re-sizes the server's stage-2 bucket at the next
+    batch boundary (always a shape-change-safe point: nothing is in
+    flight between generates); ``request_migration`` raises — the sync
+    policy has no live pool to migrate (use the continuous scheduler)."""
+
+    def __init__(self, server, n_slots: int, clock=None,
+                 max_len: Optional[int] = None):
         self.server = server
         self.n_slots = n_slots
+        self.max_len = max_len
         self.clock = clock or Clock()
-        self.queue: Deque[Request] = deque()
+        self.queue: RequestQueue = RequestQueue(
+            max_len=max_len, is_dup=lambda sid: sid in self.results)
         self.results: Dict[int, List[int]] = {}
         self.controller = None               # attached via controller.attach
         self._seen_decisions = 0
         self._seen_hard = 0
+        self._busy_sids: set = set()         # admitted, mid-generate (empty
+        self._finished: Deque = deque(maxlen=_SERIES_CAP)   # between steps)
 
     @property
     def stats(self) -> ServeStats:
@@ -1121,35 +1224,99 @@ class SyncScheduler:
         step-synchronous server re-reads its threshold per generate)."""
         self.server.set_c_thr(c_thr)
 
+    def request_capacity(self, capacity: int) -> None:
+        """Re-size the stage-2 bucket from the next static batch on —
+        batch boundaries are always discrete re-plan points for the sync
+        policy (no in-flight state between generates)."""
+        cap = max(1, int(capacity))
+        sc = self.server.sc
+        if cap == sc.capacity:
+            return
+        new_sc = ServeConfig(capacity=cap, queue_depth=sc.queue_depth,
+                             c_thr=sc.c_thr, max_pending=sc.max_pending,
+                             harvest_timeout_s=sc.harvest_timeout_s)
+        self.server.sc = new_sc
+        self.server.ring = RingQueue(new_sc, self.server.ex2, self.stats)
+
+    def request_migration(self, plan) -> None:
+        raise NotImplementedError(
+            "the sync policy has no live slot pool to migrate — live "
+            "migration needs the continuous scheduler")
+
+    # -- ReplicaHandle introspection -----------------------------------------
+
+    @property
+    def n_busy(self) -> int:
+        return len(self._busy_sids)          # 0 between steps (lockstep)
+
+    @property
+    def queue_len(self) -> int:
+        return len(self.queue)
+
+    def next_arrival(self) -> Optional[float]:
+        return self.queue.next_arrival()
+
+    def revoke_queued(self, sample_ids=None) -> List[Request]:
+        return self.queue.revoke(sample_ids)
+
+    def drain_finished(self) -> List:
+        """Pop the finish feed: (sid, n_hard, n_decisions) per finished
+        request. The sync server tallies hardness per batch, not per row,
+        so each request carries its batch's realized q scaled to its own
+        decision count — an unbiased estimate at batch granularity."""
+        out = list(self._finished)
+        self._finished.clear()
+        return out
+
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
-    def run(self) -> Dict[int, List[int]]:
-        while self.queue:
-            batch = [self.queue.popleft()
-                     for _ in range(min(self.n_slots, len(self.queue)))]
-            self.clock.advance_to(max(r.arrival_time for r in batch))
-            for r in batch:
-                self.stats.record_submit(r.sample_id, r.arrival_time)
-            prompts = [np.asarray(r.prompt, np.int32) for r in batch]
-            n_max = max(r.n_tokens for r in batch)
-            out = self.server.generate(np.stack(prompts), n_max)
-            t = self.clock.now()
-            for i, r in enumerate(batch):
-                self.results[r.sample_id] = [
-                    int(x) for x in out["tokens"][i, :r.n_tokens]]
-                self.stats.record_finish(r.sample_id, t)
-            if self.controller is not None:
-                # one controller visit per static batch (the sync policy's
-                # natural actuation granularity); confidences arrive via
-                # the server's conf sink, wired at attach
-                st = self.stats
-                n_dec = st.n_decisions - self._seen_decisions
-                n_hard = st.n_stage2 - self._seen_hard
-                self._seen_decisions = st.n_decisions
-                self._seen_hard = st.n_stage2
-                self.controller.on_tick(self, n_dec, n_hard, None)
+    def step(self) -> str:
+        """Form and run ONE static batch (waiting for its last arrival —
+        the sync policy's admission rule). Returns ``"busy"`` when a batch
+        ran, ``"idle"`` when the queue is empty; never ``"waiting"`` (the
+        batch wait IS the policy, so the clock advances internally)."""
+        if not self.queue:
+            return "idle"
+        batch = [self.queue.popleft()
+                 for _ in range(min(self.n_slots, len(self.queue)))]
+        self._busy_sids = {r.sample_id for r in batch}
+        self.clock.advance_to(max(r.arrival_time for r in batch))
+        for r in batch:
+            self.stats.record_submit(r.sample_id, r.arrival_time)
+        prompts = [np.asarray(r.prompt, np.int32) for r in batch]
+        n_max = max(r.n_tokens for r in batch)
+        dec0, hard0 = self.stats.n_decisions, self.stats.n_stage2
+        out = self.server.generate(np.stack(prompts), n_max)
+        q_batch = ((self.stats.n_stage2 - hard0)
+                   / max(self.stats.n_decisions - dec0, 1))
+        t = self.clock.now()
+        for i, r in enumerate(batch):
+            self.results[r.sample_id] = [
+                int(x) for x in out["tokens"][i, :r.n_tokens]]
+            self.stats.record_finish(r.sample_id, t)
+            n_dec = r.n_tokens - 1
+            self._finished.append((r.sample_id, q_batch * n_dec, n_dec))
+        self._busy_sids = set()
+        if self.controller is not None:
+            # one controller visit per static batch (the sync policy's
+            # natural actuation granularity); confidences arrive via
+            # the server's conf sink, wired at attach
+            st = self.stats
+            n_dec = st.n_decisions - self._seen_decisions
+            n_hard = st.n_stage2 - self._seen_hard
+            self._seen_decisions = st.n_decisions
+            self._seen_hard = st.n_stage2
+            self.controller.on_tick(self, n_dec, n_hard, None)
+        return "busy"
+
+    def drain(self) -> Dict[int, List[int]]:
+        while self.step() != "idle":
+            pass
         return self.results
+
+    def run(self) -> Dict[int, List[int]]:
+        return self.drain()
 
 
 def poisson_arrivals(n: int, rate: float, seed: int = 0) -> np.ndarray:

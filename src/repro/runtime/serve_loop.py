@@ -103,12 +103,15 @@ from repro.kernels import dispatch
 from repro.models import transformer as T
 from repro.models.config import ArchConfig
 from repro.runtime.stage_executor import StagePlacement
+from repro.runtime import serve_api
 # the scheduler module owns the shared serving substrate; re-exported names
 # keep this module the one import site for serving callers and tests
 from repro.runtime.scheduler import (  # noqa: F401  (re-exports)
     ContinuousScheduler, HarvestTimeout, Request, RingQueue, ServeConfig,
     ServeStats, SyncScheduler, _gather_rows, _ring_enqueue_range,
     _scatter_rows, bounded_wait, ring_drain, ring_enqueue, ring_init)
+from repro.runtime.serve_api import (  # noqa: F401  (re-exports)
+    ReplicaHandle, RequestQueue, build, validate_request)
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))
@@ -705,39 +708,48 @@ def _stage_fns(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
     return s1, s2
 
 
+# ---------------------------------------------------------------------------
+# DEPRECATED construction factories: keyword-compatible shims over
+# serve_api.build — the one entry point every serving mode shares. Each
+# shim warns once per process (DeprecationWarning) and forwards.
+# ---------------------------------------------------------------------------
+
 def build_server(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
                  sc: ServeConfig,
                  placement: Optional[StagePlacement] = None
                  ) -> TwoStageServer:
-    """Device-resident server over the EE model; pass a disaggregated
-    ``placement`` (StagePlacement.from_plan / from_design) to run stage 1
-    and stage 2 on disjoint submeshes — single-device is the default
-    degenerate placement, not a separate path."""
-    s1, s2 = _stage_fns(params, cfg, spec, placement)
-    return TwoStageServer(s1, s2, sc, placement)
+    """DEPRECATED — use ``serve_api.build(mode="prefill")``."""
+    serve_api._deprecated_factory("build_server")
+    return serve_api.build(params, cfg, spec, sc, mode="prefill",
+                           scheduler=None, placement=placement)
 
 
 def build_host_server(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
                       sc: ServeConfig) -> HostLoopServer:
-    """The legacy host-loop server (benchmark baseline / parity oracle)."""
-    s1, s2 = _stage_fns(params, cfg, spec)
-    return HostLoopServer(s1, s2, sc)
+    """DEPRECATED — use ``serve_api.build(mode="prefill", host=True)``."""
+    serve_api._deprecated_factory("build_host_server")
+    return serve_api.build(params, cfg, spec, sc, mode="prefill",
+                           scheduler=None, host=True)
 
 
 def build_decode_server(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
                         sc: ServeConfig,
                         placement: Optional[StagePlacement] = None
                         ) -> DecodeServer:
-    """Device-resident decode server over the EE model (disaggregated when
-    given a submesh ``placement``, single-device otherwise)."""
-    return DecodeServer(decode_stage_fns(params, cfg, spec, placement), sc,
-                        placement)
+    """DEPRECATED — use ``serve_api.build(mode="decode",
+    scheduler=None)``."""
+    serve_api._deprecated_factory("build_decode_server")
+    return serve_api.build(params, cfg, spec, sc, mode="decode",
+                           scheduler=None, placement=placement)
 
 
 def build_host_decoder(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
                        sc: ServeConfig) -> HostLoopDecoder:
-    """The host-loop decode baseline (benchmark baseline / parity oracle)."""
-    return HostLoopDecoder(decode_stage_fns(params, cfg, spec), sc)
+    """DEPRECATED — use ``serve_api.build(mode="decode", scheduler=None,
+    host=True)``."""
+    serve_api._deprecated_factory("build_host_decoder")
+    return serve_api.build(params, cfg, spec, sc, mode="decode",
+                           scheduler=None, host=True)
 
 
 def build_continuous_scheduler(params, cfg: ArchConfig,
@@ -745,36 +757,25 @@ def build_continuous_scheduler(params, cfg: ArchConfig,
                                n_slots: int, max_len: int,
                                placement: Optional[StagePlacement] = None,
                                clock=None) -> ContinuousScheduler:
-    """Continuous-batching decode scheduler over the EE model: a fixed pool
-    of ``n_slots`` decode slots backfilled from an admission queue, easy
-    slots advancing through stage 1 every tick while hard tokens wait in the
-    ring for bucketed stage-2 dispatch (``runtime/scheduler.py``).
-    ``max_len`` bounds every request's prompt + generation length (the
-    pool's shared cache width).
-
-    The attached ``fns_factory`` closes over (params, cfg, spec): it is the
-    hook live migration (``runtime/migration.py``) uses to rebuild the
-    stage callables — re-slicing params per ``ee.split_params`` — against a
-    NEW placement when the controller applies a full chip re-split or a
-    device loss degrades the mesh."""
-    return ContinuousScheduler(decode_stage_fns(params, cfg, spec, placement),
-                               sc, n_slots=n_slots, max_len=max_len,
-                               placement=placement, clock=clock,
-                               fns_factory=lambda pl: decode_stage_fns(
-                                   params, cfg, spec, pl))
+    """DEPRECATED — use ``serve_api.build(mode="decode",
+    scheduler="continuous")`` (same keywords; carries the ``fns_factory``
+    live migration rebuilds stage callables with)."""
+    serve_api._deprecated_factory("build_continuous_scheduler")
+    return serve_api.build(params, cfg, spec, sc, mode="decode",
+                           scheduler="continuous", placement=placement,
+                           n_slots=n_slots, max_len=max_len, clock=clock)
 
 
 def build_sync_scheduler(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
                          sc: ServeConfig, *, n_slots: int,
                          placement: Optional[StagePlacement] = None,
                          clock=None) -> SyncScheduler:
-    """The degenerate ``sync`` policy under the same open-loop request
-    interface: static batch formation over the step-synchronous
-    ``DecodeServer`` (which stays bitwise-parity-checked against
-    ``HostLoopDecoder``)."""
-    return SyncScheduler(build_decode_server(params, cfg, spec, sc,
-                                             placement),
-                         n_slots, clock=clock)
+    """DEPRECATED — use ``serve_api.build(mode="decode",
+    scheduler="sync")``."""
+    serve_api._deprecated_factory("build_sync_scheduler")
+    return serve_api.build(params, cfg, spec, sc, mode="decode",
+                           scheduler="sync", placement=placement,
+                           n_slots=n_slots, clock=clock)
 
 
 def serve_dataset(server, tokens: np.ndarray, batch: int) -> dict:

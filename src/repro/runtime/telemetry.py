@@ -105,6 +105,13 @@ class EventLog:
     sequence number keeps ordering meaningful even after old events fall
     off the deque, and survives ``clear()`` so flushed chunks of one
     process's log never renumber.
+
+    ``subscribe`` registers a streaming callback invoked synchronously on
+    every ``emit`` AFTER the event is buffered — the fleet router's
+    per-request event feed rides this. Subscribers must be cheap and must
+    not raise (an exception propagates to the emitter — there is no
+    swallow-and-continue, because a silently dead feed is worse than a
+    loud one).
     """
 
     def __init__(self, cap: int = 1024):
@@ -113,11 +120,23 @@ class EventLog:
         self.cap = cap
         self._buf: Deque[dict] = deque(maxlen=cap)
         self._seq = 0
+        self._subs: list = []
+
+    def subscribe(self, fn) -> "callable":
+        """Register ``fn(event_dict)`` to observe every future emit.
+        Returns ``fn`` (decorator-friendly)."""
+        self._subs.append(fn)
+        return fn
+
+    def unsubscribe(self, fn) -> None:
+        self._subs.remove(fn)
 
     def emit(self, event: str, **fields) -> dict:
         self._seq += 1
         ev = {"seq": self._seq, "t": time.time(), "event": event, **fields}
         self._buf.append(ev)
+        for fn in list(self._subs):
+            fn(ev)
         return ev
 
     def __len__(self) -> int:
