@@ -33,9 +33,9 @@ def main(argv=None) -> int:
                     help="machine-readable per-bench results on stdout")
     args = ap.parse_args(argv)
 
-    from benchmarks import (fig9_tap, roofline, serve_continuous,
-                            serve_decode, serve_drift, serve_fleet,
-                            serve_migration, serve_pipeline,
+    from benchmarks import (fig9_tap, kernel_dispatch, roofline,
+                            serve_continuous, serve_decode, serve_drift,
+                            serve_fleet, serve_migration, serve_pipeline,
                             table1_resources, table2_overhead,
                             table3_throughput, table4_networks)
     seeds = 1 if args.fast else 3
@@ -46,6 +46,7 @@ def main(argv=None) -> int:
         ("table3_throughput", table3_throughput.run),
         ("table4_networks", lambda: table4_networks.run(n_seeds=seeds)),
         ("roofline", roofline.run),
+        ("kernel_dispatch", lambda: kernel_dispatch.run(fast=args.fast)),
         ("serve_pipeline", lambda: serve_pipeline.run(fast=args.fast)),
         ("serve_decode", lambda: serve_decode.run(fast=args.fast)),
         ("serve_continuous", lambda: serve_continuous.run(fast=args.fast)),

@@ -4,6 +4,8 @@ exit_decision   — the Exit Decision layer (paper §III-C.1, Eq. 4) as one
                   fused online reduction over the class axis.
 flash_attention — blocked causal attention; the 32k-prefill FLOP hot-spot.
 gather_compact  — stream compaction; the Conditional Buffer (§III-C.2).
+fused_dispatch  — decision + compaction + ring enqueue in one HBM pass;
+                  the whole §III-C dispatch stage as a single program.
 
 Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper with CPU-interpret dispatch) and ref.py (pure-jnp oracle used by the
@@ -18,7 +20,8 @@ The per-kernel ``*_op`` wrappers re-exported here keep their historical
 from repro.kernels import dispatch
 from repro.kernels.exit_decision import exit_decision_op
 from repro.kernels.flash_attention import flash_attention_op
+from repro.kernels.fused_dispatch import fused_dispatch_op
 from repro.kernels.gather_compact import gather_compact_op
 
 __all__ = ["dispatch", "exit_decision_op", "flash_attention_op",
-           "gather_compact_op"]
+           "fused_dispatch_op", "gather_compact_op"]

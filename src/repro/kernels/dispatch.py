@@ -30,12 +30,22 @@ import jax.numpy as jnp
 
 from repro.kernels.exit_decision.kernel import exit_decision_pallas
 from repro.kernels.exit_decision.ref import exit_decision_ref
+from repro.kernels.fused_dispatch.kernel import fused_dispatch_pallas
+from repro.kernels.fused_dispatch.ref import fused_dispatch_ref
 from repro.kernels.gather_compact.kernel import gather_compact_pallas
 from repro.kernels.gather_compact.ref import gather_compact_ref
 
 BACKENDS = ("auto", "pallas", "interpret", "ref")
 _ENV_VAR = "REPRO_KERNEL_BACKEND"
 _override: Optional[str] = None
+_resolve_cache: dict = {}
+
+
+@functools.lru_cache(maxsize=1)
+def _on_tpu() -> bool:
+    # jax.default_backend() initializes the platform — not free, and the
+    # answer cannot change within a process, so ask exactly once.
+    return jax.default_backend() == "tpu"
 
 
 def set_backend(name: Optional[str]) -> None:
@@ -45,20 +55,32 @@ def set_backend(name: Optional[str]) -> None:
         raise ValueError(f"unknown kernel backend {name!r}; "
                          f"expected one of {BACKENDS}")
     _override = name
+    _resolve_cache.clear()
 
 
 def kernel_backend(backend: Optional[str] = None) -> str:
-    """Resolve to a concrete backend: 'pallas' | 'interpret' | 'ref'."""
-    req = backend or _override or os.environ.get(_ENV_VAR, "auto")
+    """Resolve to a concrete backend: 'pallas' | 'interpret' | 'ref'.
+
+    Memoized on (explicit arg, override, env var): the env var stays a live
+    input — tests monkeypatch it — but the platform probe and validation run
+    once per distinct key instead of on every hot-loop op call."""
+    env = os.environ.get(_ENV_VAR)
+    key = (backend, _override, env)
+    hit = _resolve_cache.get(key)
+    if hit is not None:
+        return hit
+    req = backend or _override or env or "auto"
     if req not in BACKENDS:
         raise ValueError(f"unknown kernel backend {req!r}; "
                          f"expected one of {BACKENDS}")
-    on_tpu = jax.default_backend() == "tpu"
     if req == "auto":
-        return "pallas" if on_tpu else "ref"
-    if req == "pallas" and not on_tpu:
-        return "interpret"          # kernel body still runs, just interpreted
-    return req
+        res = "pallas" if _on_tpu() else "ref"
+    elif req == "pallas" and not _on_tpu():
+        res = "interpret"           # kernel body still runs, just interpreted
+    else:
+        res = req
+    _resolve_cache[key] = res
+    return res
 
 
 # ---------------------------------------------------------------------------
@@ -105,3 +127,48 @@ def gather_compact_op(x: jnp.ndarray, hard_mask: jnp.ndarray, capacity: int,
     slab, ids, nh = _gather_compact(xf, hard_mask, capacity,
                                     kernel_backend(backend))
     return slab.reshape((capacity,) + feat), ids, nh
+
+
+def fused_dispatch(logits, active, sample_ids, payload, ring, c_thr, *,
+                   backend: str):
+    """Traceable fused dispatch body (decision + compaction + ring enqueue
+    in one pass) for use INSIDE an enclosing jit — the pool tick calls this
+    so the whole decode step stays one program. ``backend`` must already be
+    resolved (call ``kernel_backend`` outside the trace).
+
+    logits (B, V); active (B,) bool or None; sample_ids (B,) i32; payload
+    pytree of (B, *row) leaves matching ring['data']. Returns
+    (ring', exit_mask, pred, conf, src, n_hard); rows past the ring's free
+    space are NOT written (caller handles overflow via src)."""
+    if backend == "ref":
+        return fused_dispatch_ref(logits, active, sample_ids, payload,
+                                  ring, c_thr)
+    return fused_dispatch_pallas(logits, active, sample_ids, payload, ring,
+                                 c_thr, interpret=(backend == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("backend",),
+                   donate_argnums=(4,))
+def _fused_dispatch_donated(logits, active, sample_ids, payload, ring,
+                            c_thr, backend: str):
+    return fused_dispatch(logits, active, sample_ids, payload, ring, c_thr,
+                          backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _fused_dispatch_copy(logits, active, sample_ids, payload, ring, c_thr,
+                         backend: str):
+    return fused_dispatch(logits, active, sample_ids, payload, ring, c_thr,
+                          backend=backend)
+
+
+def fused_dispatch_op(logits: jnp.ndarray, active: Optional[jnp.ndarray],
+                      sample_ids: jnp.ndarray, payload, ring: dict, c_thr,
+                      *, backend: Optional[str] = None, donate: bool = True):
+    """Standalone jitted fused dispatch. By default the ring argument is
+    DONATED (its buffers are reused for the output ring — pass a ring you
+    no longer read); ``donate=False`` keeps the input ring alive for
+    composed-vs-fused comparisons."""
+    fn = _fused_dispatch_donated if donate else _fused_dispatch_copy
+    return fn(logits, active, sample_ids, payload, ring, c_thr,
+              backend=kernel_backend(backend))

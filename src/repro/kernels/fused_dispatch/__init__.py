@@ -1,0 +1,7 @@
+from repro.kernels.fused_dispatch.kernel import fused_dispatch_pallas
+from repro.kernels.fused_dispatch.ops import fused_dispatch_op
+from repro.kernels.fused_dispatch.ref import (compact_src, fused_dispatch_ref,
+                                              ring_offsets)
+
+__all__ = ["fused_dispatch_pallas", "fused_dispatch_op", "fused_dispatch_ref",
+           "compact_src", "ring_offsets"]

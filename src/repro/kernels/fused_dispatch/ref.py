@@ -1,0 +1,84 @@
+"""Pure-jnp oracle for the fused dispatch kernel: exit decision +
+conditional-buffer compaction + ring enqueue in ONE traced program.
+
+Semantics contract (the composition it is bitwise-equal to, enforced by
+``tests/test_fused_dispatch.py``):
+
+    exit_mask, pred, conf = exit_decision_ref(logits, c_thr)      (Eq. 4)
+    hard                  = active & ~exit_mask
+    slab, src, n_hard     = gather_compact_ref(payload, hard, B)  (§III-C.2)
+    ring'                 = _ring_enqueue_range(ring, slab,
+                                sample_ids[src], 0, n_hard)       (Fig. 7)
+
+but with no intermediate slab ever materialized: each payload leaf's hard
+rows are gathered straight into the ring slab at ``(head + count + i) %
+size`` offsets, clipped to the ring's free space (``n_enq = min(n_hard,
+size - count)``). Rows ``[n_enq, n_hard)`` are the caller's overflow — the
+backpressure chunk/stall loop re-materializes them from ``src`` (rare, and
+exactly the composed chain, so equivalence holds through overflow too).
+
+Returns ``(ring', exit_mask, pred, conf, src, n_hard)`` where ``src`` is
+the stable compaction vector: ``src[i]`` is the original row feeding slab
+lane ``i`` for ``i < n_hard``, ``-1`` beyond (identical to
+``gather_compact_ref``'s ``slab_ids`` at ``capacity = B``).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.exit_decision.ref import exit_decision_ref
+
+
+def compact_src(hard_mask: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stable stream-compaction source vector: ``src`` (B,) int32 with the
+    original row index per compacted lane (-1 pad past ``n_hard``). The
+    same prefix-sum partition as the gather_compact kernels, at capacity =
+    B — integer math, so every backend agrees bitwise."""
+    b = hard_mask.shape[0]
+    hard = hard_mask.astype(jnp.int32)
+    n_hard = jnp.sum(hard)
+    pos_hard = jnp.cumsum(hard) - 1
+    pos_easy = jnp.cumsum(1 - hard) - 1
+    slot = jnp.where(hard_mask, pos_hard, n_hard + pos_easy)
+    perm = jnp.zeros((b,), jnp.int32).at[slot].set(
+        jnp.arange(b, dtype=jnp.int32))
+    valid = jnp.arange(b) < n_hard
+    src = jnp.where(valid, perm, -1).astype(jnp.int32)
+    return src, n_hard
+
+
+def ring_offsets(src: jnp.ndarray, n_hard, head, count, size: int):
+    """Ring write offsets for the compacted lanes: lane ``i`` lands at
+    ``(head + count + i) % size`` for ``i < n_enq``; lanes past the free
+    space map out of bounds (``size``) and drop on scatter."""
+    b = src.shape[0]
+    free = jnp.int32(size) - count
+    n_enq = jnp.minimum(n_hard, free).astype(jnp.int32)
+    lanes = jnp.arange(b, dtype=jnp.int32)
+    idx = (head + count + lanes) % size
+    idx = jnp.where(lanes < n_enq, idx, size)
+    return idx, n_enq
+
+
+def fused_dispatch_ref(logits: jnp.ndarray, active: Optional[jnp.ndarray],
+                       sample_ids: jnp.ndarray, payload, ring: dict, c_thr):
+    """logits (B, V); active (B,) bool or None (= all rows eligible);
+    sample_ids (B,) int32; payload pytree of (B, *row) leaves matching
+    ring['data'] rows; ring as ``ring_init`` lays it out. See module doc
+    for the returned tuple."""
+    exit_mask, pred, conf = exit_decision_ref(logits, c_thr)
+    hard = ~exit_mask if active is None else active & ~exit_mask
+    src, n_hard = compact_src(hard)
+    size = ring["ids"].shape[0]
+    idx, n_enq = ring_offsets(src, n_hard, ring["head"], ring["count"], size)
+    take = jnp.maximum(src, 0)
+    data = jax.tree.map(
+        lambda d, p: d.at[idx].set(jnp.take(p, take, axis=0), mode="drop"),
+        ring["data"], payload)
+    ids = ring["ids"].at[idx].set(jnp.take(sample_ids, take), mode="drop")
+    new_ring = {"data": data, "ids": ids, "head": ring["head"],
+                "count": ring["count"] + n_enq}
+    return new_ring, exit_mask, pred, conf, src, n_hard

@@ -434,9 +434,36 @@ class RingQueue:
     def reset(self) -> None:
         self._buf, self.count = None, 0
 
+    def ensure(self, row_spec) -> dict:
+        """Allocate (or return) the device buffer for payload rows shaped
+        ``row_spec`` — the fused pool tick needs the buffer BEFORE launch
+        (it is donated through the tick), whereas ``enqueue`` can defer
+        allocation to the first slab it sees."""
+        if self._buf is None:
+            self._buf = self.ex.place_io(ring_init(self.size, row_spec))
+        return self._buf
+
+    def put_buf(self, buf: dict) -> None:
+        """Swap in the buffer a donated tick returned (the old one's
+        storage was consumed by the donation)."""
+        self._buf = buf
+
+    def note_enqueued(self, k: int) -> None:
+        """Advance the host count mirror for ``k`` rows a fused tick
+        already wrote device-side."""
+        self.count += k
+
     def enqueue(self, slab_tree, slab_ids, n_hard: int,
-                drain_one: Callable[[], None]) -> None:
-        faults.fault_point("enqueue")
+                drain_one: Callable[[], None], off: int = 0,
+                fire_fault: bool = True) -> None:
+        """Append rows [off, n_hard) of the compacted slab. ``off > 0`` is
+        the fused tick's overflow spill: the first ``off`` rows already
+        sit in the ring (written in-kernel), and the tick fired the
+        'enqueue' fault point itself, so the spill skips it
+        (``fire_fault=False`` — one visit per logical enqueue either
+        way)."""
+        if fire_fault:
+            faults.fault_point("enqueue")
         slab_tree = self.ex.place_io(slab_tree)
         slab_ids = self.ex.place_io(slab_ids)
         if self._buf is None:
@@ -444,7 +471,6 @@ class RingQueue:
                 lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
                 slab_tree)
             self._buf = self.ex.place_io(ring_init(self.size, spec))
-        off = 0
         while off < n_hard:
             free = self.size - self.count
             if free == 0:
@@ -624,8 +650,10 @@ def _pool_tick(tok, c1, pos, active, start, budget, c_thr, *, s1, backend):
     computed by the fused decision kernel so exposing it is free)."""
     h, nc1, exit_logits = s1(tok, c1, pos)
     nc1 = _seg_select(active, nc1, c1)
-    exit_mask, _, conf = dispatch.exit_decision_op(exit_logits, c_thr,
-                                                   backend=backend)
+    # the decision kernel's pred IS the greedy token — one logits pass
+    # serves both the exit decision and the emitted token
+    exit_mask, pred, conf = dispatch.exit_decision_op(exit_logits, c_thr,
+                                                      backend=backend)
     easy = active & exit_mask
     hard = active & ~exit_mask
     n = tok.shape[0]
@@ -633,12 +661,44 @@ def _pool_tick(tok, c1, pos, active, start, budget, c_thr, *, s1, backend):
                                                    backend=backend)
     slab_slots = src                          # slot index IS the ring id
     slab_steps = jnp.where(src >= 0, jnp.take(pos, jnp.maximum(src, 0)), 0)
-    emit_tok = jnp.argmax(exit_logits, axis=-1).astype(jnp.int32)
-    new_tok = jnp.where(easy[:, None], emit_tok[:, None], tok)
+    new_tok = jnp.where(easy[:, None], pred[:, None], tok)
     new_pos = pos + easy.astype(jnp.int32)
     new_active = easy & (new_pos - start + 1 < budget)
-    return (nc1, slab, slab_slots, slab_steps, n_hard, easy, hard, emit_tok,
+    return (nc1, slab, slab_slots, slab_steps, n_hard, easy, hard, pred,
             new_tok, new_pos, new_active, conf)
+
+
+@functools.partial(jax.jit, donate_argnums=(1, 6),
+                   static_argnames=("s1", "backend"))
+def _pool_tick_fused(tok, c1, pos, active, start, budget, ring, rows, c_thr,
+                     *, s1, backend):
+    """The persistent-tick variant: ONE compiled program per steady-state
+    decode step. Stage 1, the cache select, the exit decision, compaction
+    AND the ring enqueue all trace into this jit — the ring buffer is
+    donated through the tick, the fused dispatch kernel writes compacted
+    hard rows (hidden + stage-2 cache rows gathered from the sample-major
+    store + step lanes) straight into the slabs at (head+count) offsets,
+    and the kernel's pred doubles as the emitted token. ``rows`` (the
+    stage-2 store) is read, never donated. Rows past the ring's free space
+    are not written; the host spills them through the composed
+    backpressure chain using the returned ``src``/``h``.
+
+    Only valid on a non-disaggregated placement (one submesh cannot span
+    two)."""
+    h, nc1, exit_logits = s1(tok, c1, pos)
+    nc1 = _seg_select(active, nc1, c1)
+    n = tok.shape[0]
+    lanes = jnp.arange(n, dtype=jnp.int32)     # slot index IS the ring id
+    payload = {"h": h, "cache": rows, "step": pos}
+    ring, exit_mask, pred, conf, src, n_hard = dispatch.fused_dispatch(
+        exit_logits, active, lanes, payload, ring, c_thr, backend=backend)
+    easy = active & exit_mask
+    hard = active & ~exit_mask
+    new_tok = jnp.where(easy[:, None], pred[:, None], tok)
+    new_pos = pos + easy.astype(jnp.int32)
+    new_active = easy & (new_pos - start + 1 < budget)
+    return (nc1, ring, h, src, n_hard, easy, hard, pred, new_tok, new_pos,
+            new_active, conf)
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4, 5))
@@ -789,6 +849,9 @@ class ContinuousScheduler:
         # dispatch, token values land under a bounded pending window
         self._parked_fifo: Deque[int] = deque()
         self._pending: Deque = deque()
+        # fused-tick ring row spec, derived abstractly at pool build; None
+        # means the stage fns resisted eval_shape and ticks stay composed
+        self._ring_row_spec = None
         # device-side pool state (lazy: shapes come from the first
         # admission); lanes: next token, position, active/start/budget
         self._c1 = None
@@ -891,6 +954,23 @@ class ContinuousScheduler:
                                                        jnp.int32))
         self._budget_lane = self.ex1.place_io(jnp.zeros((self.n_slots,),
                                                         jnp.int32))
+        # derive the fused tick's ring row spec without executing stage 1:
+        # the ring must exist BEFORE the first fused launch (it is donated
+        # through the tick), and its 'h' leaf shape is stage 1's output.
+        # Duck-typed fns that resist abstract evaluation simply keep the
+        # composed three-program tick.
+        try:
+            h_av, _, _ = jax.eval_shape(self.fns.s1_raw, self._tok,
+                                        self._c1, self._pos)
+            self._ring_row_spec = {
+                "h": jax.ShapeDtypeStruct(h_av.shape[1:], h_av.dtype),
+                "cache": jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                    self._rows),
+                "step": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+        except Exception:
+            self._ring_row_spec = None
 
     def _admit_chunk(self, reqs: List[Request]) -> None:
         """Admit a chunk of requests sharing one prompt length with ONE
@@ -1038,17 +1118,28 @@ class ContinuousScheduler:
 
     # -- the tick ------------------------------------------------------------
 
+    def _use_fused(self) -> bool:
+        """The single-launch fused tick applies when stage 1, the ring and
+        the stage-2 store share one submesh (degenerate placement) and the
+        ring row spec could be derived abstractly. A migration onto a
+        disaggregated placement flips this off mid-serve (and back)."""
+        return (self._ring_row_spec is not None
+                and not self.placement.disaggregated)
+
     def _tick(self) -> None:
-        (self._c1, slab, slots, steps, n_hard_dev, easy, hard, emit_tok,
-         self._tok, self._pos, self._active_lane, conf) = _pool_tick(
-            self._tok, self._c1, self._pos, self._active_lane,
-            self._start_lane, self._budget_lane, self.c_thr,
-            s1=self.fns.s1_raw, backend=dispatch.kernel_backend())
-        # the one per-tick host sync: n_hard (control flow) + the easy/hard
-        # masks, emitted tokens and confidences (results + the controller's
-        # reservoir feed), fetched together
+        if self._use_fused():
+            self._tick_fused()
+        else:
+            self._tick_composed()
+
+    def _finish_tick(self, n_hard_dev, easy, hard, pred, conf):
+        """The one per-tick host sync: n_hard (control flow) + the easy/
+        hard masks, emitted tokens and confidences (results + the
+        controller's reservoir feed), fetched together. Emits easy tokens
+        and feeds the controller; returns the host-side pieces the hard
+        path needs."""
         n_hard, easy_np, hard_np, emit_np, conf_np = jax.device_get(
-            (n_hard_dev, easy, hard, emit_tok, conf))
+            (n_hard_dev, easy, hard, pred, conf))
         n_hard = int(n_hard)
         n_dec = int(easy_np.sum()) + n_hard
         self.stats.record_decisions(n_dec, n_hard)
@@ -1060,12 +1151,25 @@ class ContinuousScheduler:
         for i in np.nonzero(easy_np)[0]:
             self._slot_dec[int(i)] += 1
             self._emit(int(i), int(emit_np[i]))
+        return n_hard, hard_np
+
+    def _park_hard(self, hard_np) -> None:
+        for i in np.nonzero(hard_np)[0]:         # ascending = slab order
+            self._slot_dec[int(i)] += 1
+            self._slot_hard[int(i)] += 1
+            self._state[int(i)] = _PARKED
+            self._parked_fifo.append(int(i))
+
+    def _tick_composed(self) -> None:
+        (self._c1, slab, slots, steps, n_hard_dev, easy, hard, pred,
+         self._tok, self._pos, self._active_lane, conf) = _pool_tick(
+            self._tok, self._c1, self._pos, self._active_lane,
+            self._start_lane, self._budget_lane, self.c_thr,
+            s1=self.fns.s1_raw, backend=dispatch.kernel_backend())
+        n_hard, hard_np = self._finish_tick(n_hard_dev, easy, hard, pred,
+                                            conf)
         if n_hard > 0:
-            for i in np.nonzero(hard_np)[0]:     # ascending = slab order
-                self._slot_dec[int(i)] += 1
-                self._slot_hard[int(i)] += 1
-                self._state[int(i)] = _PARKED
-                self._parked_fifo.append(int(i))
+            self._park_hard(hard_np)
             # ex1 -> ex2 hop: the id lane crosses first (the cache gather
             # runs ON ex2 — the store never leaves stage 2's submesh); the
             # hidden slab + step lane cross inside the enqueue's place_io
@@ -1077,6 +1181,38 @@ class ContinuousScheduler:
                          {"h": slab, "cache": cache_slab, "step": steps},
                          slots2, n_hard, self._dispatch_bucket,
                          what="ring-enqueue")
+
+    def _tick_fused(self) -> None:
+        ring_buf = self.ring.ensure(self._ring_row_spec)
+        (self._c1, ring_buf, h, src, n_hard_dev, easy, hard, pred,
+         self._tok, self._pos, self._active_lane, conf) = _pool_tick_fused(
+            self._tok, self._c1, self._pos, self._active_lane,
+            self._start_lane, self._budget_lane, ring_buf, self._rows,
+            self.c_thr, s1=self.fns.s1_raw, backend=dispatch.kernel_backend())
+        self.ring.put_buf(ring_buf)
+        n_hard, hard_np = self._finish_tick(n_hard_dev, easy, hard, pred,
+                                            conf)
+        if n_hard > 0:
+            # the enqueue happened IN the tick; its fault boundary fires
+            # here (same visit cadence as the composed path — once per
+            # hard tick). A transient fault is absorbed by the retry with
+            # the device ring already consistent; only the host mirror
+            # below was still pending.
+            faults.retry(faults.fault_point, "enqueue", what="ring-enqueue")
+            n_enq = min(n_hard, self.ring.size - self.ring.count)
+            self.ring.note_enqueued(n_enq)
+            self._park_hard(hard_np)
+            if n_enq < n_hard:
+                # overflow: the ring filled mid-batch. Re-materialize the
+                # still-pending slab rows from src (hard rows' pos did not
+                # advance, so the live lanes are still decision-time
+                # steps) and push them through the composed backpressure
+                # chain — stall/drain ordering and n_stalls match the
+                # composed path exactly.
+                slab = _gather_rows({"h": h, "cache": self._rows,
+                                     "step": self._pos}, src)
+                self.ring.enqueue(slab, src, n_hard, self._dispatch_bucket,
+                                  off=n_enq, fire_fault=False)
 
     # -- the loop ------------------------------------------------------------
 

@@ -103,7 +103,7 @@ from repro.kernels import dispatch
 from repro.models import transformer as T
 from repro.models.config import ArchConfig
 from repro.runtime.stage_executor import StagePlacement
-from repro.runtime import serve_api
+from repro.runtime import faults, serve_api
 # the scheduler module owns the shared serving substrate; re-exported names
 # keep this module the one import site for serving callers and tests
 from repro.runtime.scheduler import (  # noqa: F401  (re-exports)
@@ -124,15 +124,16 @@ def _decide_compact(hidden, exit_logits, sample_ids, c_thr, *, backend):
     ever dropped here; the ring applies backpressure. The per-row
     confidences the fused kernel already computes ride along for the
     drift-telemetry reservoir (free on device; only fetched when a
-    controller is listening)."""
-    exit_mask, _, conf = dispatch.exit_decision_op(exit_logits, c_thr,
-                                                   backend=backend)
+    controller is listening), as do the greedy preds — the decode merge
+    path emits them instead of re-running argmax over the logits."""
+    exit_mask, pred, conf = dispatch.exit_decision_op(exit_logits, c_thr,
+                                                      backend=backend)
     b = hidden.shape[0]
     slab, pos, n_hard = dispatch.gather_compact_op(hidden, ~exit_mask, b,
                                                    backend=backend)
     slab_ids = jnp.where(pos >= 0,
                          jnp.take(sample_ids, jnp.maximum(pos, 0)), -1)
-    return slab, slab_ids, n_hard, exit_mask, conf
+    return slab, slab_ids, n_hard, exit_mask, pred, conf
 
 
 # ---------------------------------------------------------------------------
@@ -172,6 +173,47 @@ class _RingedServer:
         chunks, stalling (draining) whenever the ring is out of space — see
         ``scheduler.RingQueue.enqueue`` (the Fig. 7 backpressure story)."""
         self.ring.enqueue(slab_tree, slab_ids, n_hard, self._drain)
+
+    def _use_fused(self) -> bool:
+        """The fused dispatch op (decision + compaction + in-ring enqueue,
+        one program) applies when stage 1 and the ring share a submesh; a
+        disaggregated placement keeps the composed chain, whose enqueue IS
+        the cross-submesh hop."""
+        return not self.placement.disaggregated
+
+    def _fused_dispatch_enqueue(self, exit_logits, sample_ids, payload,
+                                row_spec):
+        """One fused op replaces exit_decision -> gather_compact -> per-leaf
+        ring scatter: compacted hard rows land directly in the ring slabs
+        at (head+count) offsets, with the ring buffer donated through the
+        op. Syncs the scalar n_hard (+ confidences when a sink listens —
+        the same single host sync as the composed path), advances the
+        ring's host count mirror, and pushes any overflow past the ring's
+        free space through the composed backpressure chain (identical
+        stall/drain ordering). Returns (exit_mask, pred, conf, n_hard)."""
+        ring_buf = self.ring.ensure(row_spec)
+        (ring_buf, exit_mask, pred, conf, src,
+         n_hard_dev) = dispatch.fused_dispatch_op(
+            exit_logits, None, sample_ids, payload, ring_buf, self.c_thr)
+        self.ring.put_buf(ring_buf)
+        if self.conf_sink is not None:        # rides the n_hard sync
+            n_hard_dev, conf_np = jax.device_get((n_hard_dev, conf))
+            self.conf_sink.extend(conf_np)
+        n_hard = int(n_hard_dev)              # the one host sync
+        if n_hard > 0:
+            # the enqueue already happened in-op; its fault boundary keeps
+            # the composed visit cadence (once per hard batch)
+            faults.fault_point("enqueue")
+            n_enq = min(n_hard, self.ring.size - self.ring.count)
+            self.ring.note_enqueued(n_enq)
+            if n_enq < n_hard:                # ring filled mid-batch: spill
+                slab = _gather_rows(payload, src)
+                ids = jnp.where(src >= 0,
+                                jnp.take(sample_ids, jnp.maximum(src, 0)),
+                                -1)
+                self.ring.enqueue(slab, ids, n_hard, self._drain,
+                                  off=n_enq, fire_fault=False)
+        return exit_mask, pred, conf, n_hard
 
     def _pop_bucket(self):
         """Pop up to ``capacity`` rows; returns (bucket pytree, ids) or
@@ -276,19 +318,24 @@ class TwoStageServer(_RingedServer):
         ids_dev = self.ex1.place_io(jnp.asarray(np.asarray(sample_ids,
                                                            np.int32)))
         hidden, exit_logits = self.stage1(tokens)
-        slab, slab_ids, n_hard_dev, exit_mask, conf = _decide_compact(
-            hidden, exit_logits, ids_dev, self.c_thr,
-            backend=dispatch.kernel_backend())
-        if self.conf_sink is not None:        # rides the n_hard sync
-            n_hard_dev, conf_np = jax.device_get((n_hard_dev, conf))
-            self.conf_sink.extend(conf_np)
-        n_hard = int(n_hard_dev)              # the one host sync per batch
+        if self._use_fused():
+            exit_mask, _, conf, n_hard = self._fused_dispatch_enqueue(
+                exit_logits, ids_dev, hidden,
+                jax.ShapeDtypeStruct(hidden.shape[1:], hidden.dtype))
+        else:
+            slab, slab_ids, n_hard_dev, exit_mask, _, conf = _decide_compact(
+                hidden, exit_logits, ids_dev, self.c_thr,
+                backend=dispatch.kernel_backend())
+            if self.conf_sink is not None:    # rides the n_hard sync
+                n_hard_dev, conf_np = jax.device_get((n_hard_dev, conf))
+                self.conf_sink.extend(conf_np)
+            n_hard = int(n_hard_dev)          # the one host sync per batch
+            if n_hard > 0:
+                self._enqueue_backpressured(slab, slab_ids, n_hard)
         b = int(tokens.shape[0])
         self.stats.n_samples += b
         self.stats.record_decisions(b, n_hard)
         self._easy.append((np.asarray(sample_ids), exit_mask, exit_logits))
-        if n_hard > 0:
-            self._enqueue_backpressured(slab, slab_ids, n_hard)
         while self._count >= self.sc.capacity:
             self._drain()
         self._harvest_oldest(results)
@@ -406,6 +453,16 @@ def _merge_bucket_logits(merged, ids, logits):
     the per-step logits with their stage-2 results (flush ids dropped)."""
     safe = jnp.where(ids >= 0, ids, merged.shape[0])
     return merged.at[safe].set(logits, mode="drop")
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _merge_bucket_tokens(tok_vec, ids, logits):
+    """Exit Merge for the greedy token lane: easy rows keep the decision
+    kernel's pred (already argmax of the exit logits — no second logits
+    pass), hard rows take their bucket's argmax (flush ids dropped)."""
+    safe = jnp.where(ids >= 0, ids, tok_vec.shape[0])
+    s2_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return tok_vec.at[safe].set(s2_tok, mode="drop")
 
 
 @jax.jit
@@ -542,38 +599,58 @@ class DecodeServer(_RingedServer):
         self._step_buckets.append((bucket_ids, logits))
 
     def _step(self, tok, pos: int):
-        """One decode step for the whole batch; returns merged (B, V)
-        logits (device, on ex1). Ring drains fully — decode is
-        step-synchronous."""
+        """One decode step for the whole batch; returns (merged (B, V)
+        logits, next greedy tokens (B, 1)), both device-side on ex1. The
+        token lane starts as the decision kernel's pred (easy rows' argmax
+        comes free with the exit decision) and hard rows are overwritten
+        per bucket. Ring drains fully — decode is step-synchronous."""
         h_rows, self._c1, exit_logits = self.fns.s1(tok, self._c1, pos)
-        slab, slab_ids, n_hard_dev, _, conf = _decide_compact(
-            h_rows, exit_logits, self._ids, self.c_thr,
-            backend=dispatch.kernel_backend())
-        if self.conf_sink is not None:       # rides the n_hard sync
-            n_hard_dev, conf_np = jax.device_get((n_hard_dev, conf))
-            self.conf_sink.extend(conf_np)
-        n_hard = int(n_hard_dev)             # the one host sync per step
-        b = h_rows.shape[0]
-        self.stats.record_decisions(b, n_hard)
         self._pos = pos
         self._step_buckets = []
-        if n_hard > 0:
-            # ex1 -> ex2 hop: the id lane crosses first (the cache gather
-            # runs ON ex2 — the store never leaves stage 2's submesh); the
-            # hidden slab crosses inside the enqueue's place_io
-            slab_ids = self.ex2.place_io(slab_ids)
-            cache_slab = _gather_rows(self._rows, slab_ids)
-            self._enqueue_backpressured({"h": slab, "cache": cache_slab},
-                                        slab_ids, n_hard)
+        if self._use_fused():
+            # fused: hard rows' hidden AND stage-2 cache rows land in the
+            # ring in the same pass (self._ids is arange(B), so the op's
+            # gather-by-src is exactly the composed gather-by-ids)
+            row_spec = {
+                "h": jax.ShapeDtypeStruct(h_rows.shape[1:], h_rows.dtype),
+                "cache": jax.tree.map(
+                    lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                    self._rows)}
+            _, pred, conf, n_hard = self._fused_dispatch_enqueue(
+                exit_logits, self._ids, {"h": h_rows, "cache": self._rows},
+                row_spec)
+            b = h_rows.shape[0]
+            self.stats.record_decisions(b, n_hard)
+        else:
+            slab, slab_ids, n_hard_dev, _, pred, conf = _decide_compact(
+                h_rows, exit_logits, self._ids, self.c_thr,
+                backend=dispatch.kernel_backend())
+            if self.conf_sink is not None:   # rides the n_hard sync
+                n_hard_dev, conf_np = jax.device_get((n_hard_dev, conf))
+                self.conf_sink.extend(conf_np)
+            n_hard = int(n_hard_dev)         # the one host sync per step
+            b = h_rows.shape[0]
+            self.stats.record_decisions(b, n_hard)
+            if n_hard > 0:
+                # ex1 -> ex2 hop: the id lane crosses first (the cache
+                # gather runs ON ex2 — the store never leaves stage 2's
+                # submesh); the hidden slab crosses inside the enqueue's
+                # place_io
+                slab_ids = self.ex2.place_io(slab_ids)
+                cache_slab = _gather_rows(self._rows, slab_ids)
+                self._enqueue_backpressured({"h": slab, "cache": cache_slab},
+                                            slab_ids, n_hard)
         while self._count > 0:               # full buckets, then the partial
             self._drain()
         merged = exit_logits
+        tok_vec = pred
         for bucket_ids, logits in self._step_buckets:
             # ex2 -> ex1 hop: bucket results come home for the exit merge
-            merged = _merge_bucket_logits(merged,
-                                          self.ex1.place_io(bucket_ids),
-                                          self.ex1.place_io(logits))
-        return merged
+            ids1 = self.ex1.place_io(bucket_ids)
+            logits1 = self.ex1.place_io(logits)
+            merged = _merge_bucket_logits(merged, ids1, logits1)
+            tok_vec = _merge_bucket_tokens(tok_vec, ids1, logits1)
+        return merged, tok_vec[:, None]
 
     # -- public --------------------------------------------------------------
 
@@ -595,11 +672,11 @@ class DecodeServer(_RingedServer):
         # stream start (prefill itself runs on ex1, which holds full params)
         self._rows = self.ex2.place_io(rows)
         merged = logits0
+        tok = _greedy_tokens(merged)         # t=0: from the prefill logits
         logits_out: List = [None] * n_tokens
         toks_out: List = []
         pending: List[Tuple[int, jnp.ndarray]] = []
         for t in range(n_tokens):
-            tok = _greedy_tokens(merged)
             toks_out.append(tok)
             pending.append((t, merged))
             while len(pending) > self.sc.max_pending:
@@ -607,7 +684,7 @@ class DecodeServer(_RingedServer):
                 logits_out[slot] = np.asarray(arr)
             if t == n_tokens - 1:
                 break
-            merged = self._step(tok, S + t)
+            merged, tok = self._step(tok, S + t)
         for slot, arr in pending:            # flush
             logits_out[slot] = np.asarray(arr)
         tokens = np.concatenate([np.asarray(x) for x in toks_out], axis=1)

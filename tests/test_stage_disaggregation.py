@@ -195,7 +195,8 @@ def test_disagg_server_params_and_ring_resident():
     srv = SL.build_server(params, cfg, spec, sc, pl)
     SL.serve_dataset(srv, toks, batch=8)
     ids2 = {d.id for d in pl.ex2.devices}
-    assert {d.id for d in srv._buf["ids"].sharding.device_set} <= ids2
+    assert {d.id
+            for d in srv.ring._buf["ids"].sharding.device_set} <= ids2
 
 
 @_multi_device
