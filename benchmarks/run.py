@@ -35,9 +35,10 @@ def main(argv=None) -> int:
 
     from benchmarks import (fig9_tap, kernel_dispatch, roofline,
                             serve_continuous, serve_decode, serve_drift,
-                            serve_fleet, serve_migration, serve_pipeline,
-                            table1_resources, table2_overhead,
-                            table3_throughput, table4_networks)
+                            serve_fleet, serve_migration, serve_paged,
+                            serve_pipeline, table1_resources,
+                            table2_overhead, table3_throughput,
+                            table4_networks)
     seeds = 1 if args.fast else 3
     benches = [
         ("fig9_tap", lambda: fig9_tap.run(n_seeds=seeds)),
@@ -50,6 +51,7 @@ def main(argv=None) -> int:
         ("serve_pipeline", lambda: serve_pipeline.run(fast=args.fast)),
         ("serve_decode", lambda: serve_decode.run(fast=args.fast)),
         ("serve_continuous", lambda: serve_continuous.run(fast=args.fast)),
+        ("serve_paged", lambda: serve_paged.run(fast=args.fast)),
         ("serve_drift", lambda: serve_drift.run(fast=args.fast)),
         ("serve_migration", lambda: serve_migration.run(fast=args.fast)),
         ("serve_fleet", lambda: serve_fleet.run(fast=args.fast)),

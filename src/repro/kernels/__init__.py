@@ -6,6 +6,9 @@ flash_attention — blocked causal attention; the 32k-prefill FLOP hot-spot.
 gather_compact  — stream compaction; the Conditional Buffer (§III-C.2).
 fused_dispatch  — decision + compaction + ring enqueue in one HBM pass;
                   the whole §III-C dispatch stage as a single program.
+paged_attention — block-table paged KV-cache gather + tail-page append in
+                  one launch; the decode-cache memory analogue of the
+                  exit cascade's "pay only for what runs".
 
 Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper with CPU-interpret dispatch) and ref.py (pure-jnp oracle used by the
@@ -22,6 +25,8 @@ from repro.kernels.exit_decision import exit_decision_op
 from repro.kernels.flash_attention import flash_attention_op
 from repro.kernels.fused_dispatch import fused_dispatch_op
 from repro.kernels.gather_compact import gather_compact_op
+from repro.kernels.paged_attention import paged_gather_append_op
 
 __all__ = ["dispatch", "exit_decision_op", "flash_attention_op",
-           "fused_dispatch_op", "gather_compact_op"]
+           "fused_dispatch_op", "gather_compact_op",
+           "paged_gather_append_op"]

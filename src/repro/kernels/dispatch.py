@@ -34,6 +34,8 @@ from repro.kernels.fused_dispatch.kernel import fused_dispatch_pallas
 from repro.kernels.fused_dispatch.ref import fused_dispatch_ref
 from repro.kernels.gather_compact.kernel import gather_compact_pallas
 from repro.kernels.gather_compact.ref import gather_compact_ref
+from repro.kernels.paged_attention.kernel import paged_gather_append_pallas
+from repro.kernels.paged_attention.ref import paged_gather_append_ref
 
 BACKENDS = ("auto", "pallas", "interpret", "ref")
 _ENV_VAR = "REPRO_KERNEL_BACKEND"
@@ -127,6 +129,60 @@ def gather_compact_op(x: jnp.ndarray, hard_mask: jnp.ndarray, capacity: int,
     slab, ids, nh = _gather_compact(xf, hard_mask, capacity,
                                     kernel_backend(backend))
     return slab.reshape((capacity,) + feat), ids, nh
+
+
+def paged_gather_append(a_pool, b_pool, a_new, b_new, block_tables, pos, *,
+                        backend: str):
+    """Traceable paged-cache gather+append body for use INSIDE an enclosing
+    jit (the paged decode step calls this per attention layer). ``backend``
+    must already be resolved (call ``kernel_backend`` outside the trace).
+
+    a_pool/b_pool: (P, page, *F) page pools (page 0 = null, all-zeros);
+    a_new/b_new: (B, *F) new-token rows; block_tables: (B, M) i32; pos:
+    (B,) i32 linear write positions (>= M*page skips the append). Returns
+    (gathered_a (B, M, page, *Fa), gathered_b, a_pool', b_pool') — the
+    gathered slabs reshaped to (B, M*page, *F) are exactly the dense cache
+    rows, appended token included. Feature dims are flattened for the
+    kernel and restored here, so every backend is bitwise-identical."""
+    fa, fb = a_pool.shape[2:], b_pool.shape[2:]
+    n_pages, page = a_pool.shape[:2]
+    B, M = block_tables.shape
+    if backend == "ref":
+        ga, gb, ap, bp = paged_gather_append_ref(
+            a_pool, b_pool, a_new, b_new, block_tables, pos)
+        return ga, gb, ap, bp
+    ga, gb, ap, bp = paged_gather_append_pallas(
+        a_pool.reshape(n_pages, page, -1), b_pool.reshape(n_pages, page, -1),
+        a_new.reshape(B, -1), b_new.reshape(B, -1), block_tables, pos,
+        interpret=(backend == "interpret"))
+    return (ga.reshape((B, M, page) + fa), gb.reshape((B, M, page) + fb),
+            ap.reshape(a_pool.shape), bp.reshape(b_pool.shape))
+
+
+@functools.partial(jax.jit, static_argnames=("backend",),
+                   donate_argnums=(0, 1))
+def _paged_gather_append_donated(a_pool, b_pool, a_new, b_new, block_tables,
+                                 pos, backend: str):
+    return paged_gather_append(a_pool, b_pool, a_new, b_new, block_tables,
+                               pos, backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _paged_gather_append_copy(a_pool, b_pool, a_new, b_new, block_tables,
+                              pos, backend: str):
+    return paged_gather_append(a_pool, b_pool, a_new, b_new, block_tables,
+                               pos, backend=backend)
+
+
+def paged_gather_append_op(a_pool, b_pool, a_new, b_new, block_tables, pos,
+                           *, backend: Optional[str] = None,
+                           donate: bool = True):
+    """Standalone jitted paged gather+append. By default the pools are
+    DONATED (the appended pools reuse their buffers); ``donate=False``
+    keeps the inputs alive for paged-vs-dense comparisons."""
+    fn = _paged_gather_append_donated if donate else _paged_gather_append_copy
+    return fn(a_pool, b_pool, a_new, b_new, block_tables, pos,
+              backend=kernel_backend(backend))
 
 
 def fused_dispatch(logits, active, sample_ids, payload, ring, c_thr, *,

@@ -1,0 +1,6 @@
+from repro.kernels.paged_attention.kernel import paged_gather_append_pallas
+from repro.kernels.paged_attention.ops import paged_gather_append_op
+from repro.kernels.paged_attention.ref import paged_gather_append_ref
+
+__all__ = ["paged_gather_append_pallas", "paged_gather_append_op",
+           "paged_gather_append_ref"]

@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the paged KV-cache gather+append primitive.
+
+The paged cache stores K/V in fixed-size pages inside a shared pool
+``(n_pages, page, *feat)``; each decode row owns an int32 block-table row
+``(max_pages,)`` of pool page indices. Page 0 is the NULL page: never
+allocated, always all-zeros — unused block-table tail entries point at it,
+so a gather over a row's full table reconstructs exactly the dense cache
+row (dense positions past the written prefix are zeros too). That identity
+is what makes paged-vs-dense decode parity *bitwise*, not approximate.
+
+One call does, per row, in this order (matching the dense write-then-attend
+decode step):
+
+  1. APPEND — write the row's new-token features into its tail page at
+     linear position ``pos[b]`` (page ``pos//page``, row ``pos%page``).
+     Rows with ``pos >= max_pages*page`` (the parked/flush sentinel) write
+     nothing.
+  2. GATHER — read the row's pages out of the (already appended) pool into
+     ``(B, max_pages, page, *feat)``; reshaped to ``(B, max_pages*page,
+     *feat)`` this IS the dense cache row.
+
+Two pools (K and V for attention; latent and rope for MLA) move through a
+single call so the serving hot path pays one primitive per layer.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def paged_gather_append_ref(a_pool: jnp.ndarray, b_pool: jnp.ndarray,
+                            a_new: jnp.ndarray, b_new: jnp.ndarray,
+                            block_tables: jnp.ndarray, pos: jnp.ndarray
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                       jnp.ndarray, jnp.ndarray]:
+    """a_pool: (P, page, *Fa); b_pool: (P, page, *Fb); a_new: (B, *Fa);
+    b_new: (B, *Fb); block_tables: (B, M) i32 pool page ids (0 = null);
+    pos: (B,) i32 linear write position, >= M*page disables the append.
+
+    Returns (gathered_a (B, M, page, *Fa), gathered_b, a_pool', b_pool')."""
+    n_pages, page = a_pool.shape[:2]
+    B, M = block_tables.shape
+    pg = jnp.clip(pos // page, 0, M - 1)
+    tail_page = jnp.take_along_axis(block_tables, pg[:, None], axis=1)[:, 0]
+    # rows whose pos is out of range (the parked/flush sentinel) or whose
+    # tail entry is the null page scatter at index n_pages -> dropped; the
+    # null page stays all-zeros no matter what the caller hands us
+    in_range = (pos < M * page) & (tail_page > 0)
+    dst_page = jnp.where(in_range, tail_page, n_pages)
+    dst_row = jnp.where(in_range, pos % page, 0)
+    a_pool = a_pool.at[dst_page, dst_row].set(a_new, mode="drop")
+    b_pool = b_pool.at[dst_page, dst_row].set(b_new, mode="drop")
+    gathered_a = a_pool[block_tables]            # (B, M, page, *Fa)
+    gathered_b = b_pool[block_tables]
+    return gathered_a, gathered_b, a_pool, b_pool

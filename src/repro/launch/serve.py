@@ -135,7 +135,8 @@ def _serve_fleet(args, cfg, spec, params, sc, placement) -> int:
     replicas = [serve_api.build(params, cfg, spec, sc, mode="decode",
                                 scheduler="continuous", placement=placement,
                                 n_slots=args.batch, max_len=max_len,
-                                clock=clock)
+                                page_size=args.page_size,
+                                n_pages=args.n_pages, clock=clock)
                 for _ in range(args.replicas)]
     router = FleetRouter(replicas, policy=args.routing_policy,
                          provisioned_p=[args.p] * args.replicas)
@@ -197,6 +198,15 @@ def main(argv=None) -> int:
                          "gold/standard/batch), e.g. 'web=gold,batch=batch'."
                          " Requests cycle over the listed tenants; default: "
                          "one 'default' tenant at standard")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="enable the paged KV cache with this page size "
+                         "(decode modes; seq+decode-tokens must be a "
+                         "multiple)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="page-pool capacity in pages (continuous paged "
+                         "mode; default: dense-equivalent "
+                         "n_slots*max_len/page — shrink it to trade "
+                         "admission backpressure for HBM)")
     ap.add_argument("--arrival-rate", type=float, default=float("inf"),
                     help="open-loop Poisson request rate (req/s) for decode "
                          "mode; inf = all requests arrive at t=0")
@@ -254,7 +264,9 @@ def main(argv=None) -> int:
         sched = serve_api.build(params, cfg, spec, sc, mode="decode",
                                 scheduler=args.scheduler,
                                 placement=placement, n_slots=args.batch,
-                                max_len=max_len)
+                                max_len=max_len,
+                                page_size=args.page_size,
+                                n_pages=args.n_pages)
         controller = None
         if args.controller:
             controller = DriftController(ControllerConfig(

@@ -10,8 +10,9 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.models import hints
 from repro.models.config import ArchConfig
-from repro.models.layers import (apply_rope, blocked_attention, decode_attention,
-                                 dense_init, init_rmsnorm, rmsnorm)
+from repro.models.layers import (apply_rope, blocked_attention,
+                                 dense_init, init_rmsnorm,
+                                 masked_decode_attention, rmsnorm)
 
 
 def attention_core(q, k, v, *, causal: bool, window: Optional[int],
@@ -177,21 +178,69 @@ def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, window: Optional[in
     }
 
 
+def init_paged_kv_cache(cfg: ArchConfig, batch: int, max_len: int,
+                        page_size: int, n_pages: int):
+    """Paged cache pytree for ONE attention layer: a shared page pool
+    ``(n_pages, page, KH, hd)`` (page 0 = NULL, kept all-zeros) plus a
+    per-row block table ``bt: (batch, max_pages)`` of pool page indices
+    (0 = unused). Keys mirror the dense cache ({k, v}) so the segment
+    helpers (``ee.split_caches``) pair pool leaves with dense-row leaves
+    structurally; the ``bt`` leaf marks the cache as paged."""
+    if max_len % page_size != 0:
+        raise ValueError(f"max_len={max_len} must be a multiple of "
+                         f"page_size={page_size} (bitwise paged/dense "
+                         f"parity needs the gathered span == max_len)")
+    KH, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = cfg.act_dtype()
+    return {
+        "k": jnp.zeros((n_pages, page_size, KH, hd), dt),
+        "v": jnp.zeros((n_pages, page_size, KH, hd), dt),
+        "bt": jnp.zeros((batch, max_len // page_size), jnp.int32),
+    }
+
+
 def attention_decode(params, cfg: ArchConfig, x, cache, step, *,
                      window: Optional[int] = None):
-    """One-token decode. x: (B, 1, d). cache: this layer's {k,v}.
+    """One-token decode. x: (B, 1, d). cache: this layer's {k,v}, or the
+    paged {k pool, v pool, bt block table} (detected by the ``bt`` key).
     step: scalar int32 — current absolute position shared by the batch — or
     a (B,) int32 vector of PER-ROW positions (continuous-batching decode,
     where slots in one pool batch sit at different depths). The scalar path
     is untouched (bitwise parity with the step-synchronous servers); the
     vector path scatters each row's k/v at its own slot and masks each
-    row's attention span by its own length. Returns (out, new_cache)."""
+    row's attention span by its own length. Every path routes through the
+    ONE masked attention core (``layers.masked_decode_attention``), so
+    dense/windowed/paged agree bitwise given identical cache bytes.
+    Returns (out, new_cache)."""
     B = x.shape[0]
     H, KH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     per_row = jnp.ndim(step) == 1
     pos = step[:, None] if per_row else jnp.full((B, 1), step, jnp.int32)
     q, k, v = _project_qkv(params, cfg, x, pos)
     q = q[:, 0]                                    # (B, H, hd)
+    if "bt" in cache:
+        if window:
+            raise NotImplementedError("windowed layers keep the dense ring "
+                                      "cache; paged mode rejects them")
+        from repro.kernels import dispatch
+        bt = cache["bt"]
+        M, page = bt.shape[1], cache["k"].shape[1]
+        pos_vec = step if per_row else jnp.full((B,), step, jnp.int32)
+        gk, gv, k_pool, v_pool = dispatch.paged_gather_append(
+            cache["k"], cache["v"], k[:, 0], v[:, 0], bt, pos_vec,
+            backend=dispatch.kernel_backend())
+        L = M * page
+        k_cache = gk.reshape(B, L, KH, hd)
+        v_cache = gv.reshape(B, L, KH, hd)
+        # sentinel rows (pos >= L, parked/flush slots) keep an all-true
+        # mask over all-zero gathered pages: attention over zeros is
+        # finite garbage on a discarded row, never a NaN softmax
+        valid = (jnp.arange(L)[None, :] <= pos_vec[:, None]) | (
+            pos_vec[:, None] >= L)
+        out = masked_decode_attention(q, k_cache, v_cache, valid,
+                                      softcap=cfg.logit_softcap)
+        out = jnp.einsum("be,ed->bd", out.reshape(B, -1), params["wo"])
+        return out[:, None, :], {"k": k_pool, "v": v_pool, "bt": bt}
     L = cache["k"].shape[1]
     slot = (step % L) if window else step
     if per_row:
@@ -210,25 +259,17 @@ def attention_decode(params, cfg: ArchConfig, x, cache, step, *,
             abs_pos = step[:, None] - ((slot[:, None] - idx[None, :]) % L)
             valid = ((abs_pos >= 0) & (abs_pos <= step[:, None])
                      & (abs_pos > step[:, None] - L))       # (B, L)
-            vmask = valid[:, None, None, :]
         else:
             abs_pos = step - ((slot - idx) % L)
             valid = (abs_pos >= 0) & (abs_pos <= step) & (abs_pos > step - L)
-            vmask = valid[None, None, None, :]
-        G = H // KH
-        qf = q.reshape(B, KH, G, hd).astype(jnp.float32)
-        s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32)) / jnp.sqrt(
-            jnp.array(hd, jnp.float32))
-        if cfg.logit_softcap is not None:
-            s = cfg.logit_softcap * jnp.tanh(s / cfg.logit_softcap)
-        s = jnp.where(vmask, s, -jnp.inf)
-        p = jax.nn.softmax(s, axis=-1)
-        out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
-        out = out.reshape(B, H, hd).astype(x.dtype)
+            valid = jnp.broadcast_to(valid[None, :], (B, L))
+        out = masked_decode_attention(q, k_cache, v_cache, valid,
+                                      softcap=cfg.logit_softcap)
     else:
         cache_len = (step + 1 if per_row
                      else jnp.full((B,), step + 1, jnp.int32))
-        out = decode_attention(q, k_cache, v_cache, cache_len,
-                               softcap=cfg.logit_softcap)
+        valid = jnp.arange(L)[None, :] < cache_len[:, None]
+        out = masked_decode_attention(q, k_cache, v_cache, valid,
+                                      softcap=cfg.logit_softcap)
     out = jnp.einsum("be,ed->bd", out.reshape(B, -1), params["wo"])
     return out[:, None, :], {"k": k_cache, "v": v_cache}

@@ -408,12 +408,15 @@ def _fad_bwd(causal, window, q_block, kv_block, res, dout):
 flash_attention_diff.defvjp(_fad_fwd, _fad_bwd)
 
 
-def decode_attention(q, k_cache, v_cache, cache_len, *, window: Optional[int] = None,
-                     softcap: Optional[float] = None):
-    """Single-step attention against a cache.
+def masked_decode_attention(q, k_cache, v_cache, valid, *,
+                            softcap: Optional[float] = None):
+    """The ONE masked single-step attention core every decode path shares.
 
-    q: (B, H, D); caches: (B, Smax, KH, D); cache_len: (B,) valid lengths
-    (the new token's k/v must already be written at cache_len-1).
+    q: (B, H, D); caches: (B, Smax, KH, D); valid: (B, Smax) bool — which
+    cache positions participate. Callers build ``valid`` from their own
+    bookkeeping (prefix length, sliding window over a ring buffer, paged
+    block tables); the attention math itself is identical, which is what
+    makes dense/windowed/paged parity *bitwise* rather than approximate.
     """
     B, Smax, KH, D = k_cache.shape
     H = q.shape[1]
@@ -423,11 +426,23 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window: Optional[int] = 
     s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32)) * scale
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
-    pos = jnp.arange(Smax)[None, :]                        # (1, Smax)
-    valid = pos < cache_len[:, None]
-    if window is not None:
-        valid = valid & (pos >= cache_len[:, None] - window)
     s = jnp.where(valid[:, None, None], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
     return out.reshape(B, H, D).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: Optional[int] = None,
+                     softcap: Optional[float] = None):
+    """Single-step attention against a cache.
+
+    q: (B, H, D); caches: (B, Smax, KH, D); cache_len: (B,) valid lengths
+    (the new token's k/v must already be written at cache_len-1).
+    """
+    Smax = k_cache.shape[1]
+    pos = jnp.arange(Smax)[None, :]                        # (1, Smax)
+    valid = pos < cache_len[:, None]
+    if window is not None:
+        valid = valid & (pos >= cache_len[:, None] - window)
+    return masked_decode_attention(q, k_cache, v_cache, valid,
+                                   softcap=softcap)

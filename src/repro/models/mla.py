@@ -93,17 +93,81 @@ def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int):
     }
 
 
-def mla_decode(params, cfg: ArchConfig, x, cache, step):
-    """One-token MLA decode against the compressed cache. ``step`` is the
-    scalar absolute position, or a (B,) int32 vector of per-row positions
-    (continuous-batching decode); the scalar path is untouched for bitwise
-    parity with the step-synchronous servers."""
+def init_paged_mla_cache(cfg: ArchConfig, batch: int, max_len: int,
+                         page_size: int, n_pages: int):
+    """Paged compressed cache for ONE MLA layer: shared page pools for the
+    latent and the rope key (page 0 = NULL, all-zeros) plus the per-row
+    ``bt`` block table — same discipline as
+    ``attention.init_paged_kv_cache``."""
+    if max_len % page_size != 0:
+        raise ValueError(f"max_len={max_len} must be a multiple of "
+                         f"page_size={page_size} (bitwise paged/dense "
+                         f"parity needs the gathered span == max_len)")
     m = cfg.mla
-    B = x.shape[0]
+    dt = cfg.act_dtype()
+    return {
+        "latent": jnp.zeros((n_pages, page_size, m.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((n_pages, page_size, m.qk_rope_head_dim), dt),
+        "bt": jnp.zeros((batch, max_len // page_size), jnp.int32),
+    }
+
+
+def _mla_attend(params, cfg: ArchConfig, q_nope, q_rope, lat_cache,
+                kr_cache, valid, dtype):
+    """The post-write absorbed-decode math, shared by the dense and paged
+    paths: identical cache bytes -> bitwise-identical output."""
+    m = cfg.mla
+    B = q_nope.shape[0]
     H = cfg.n_heads
+    # score = q_nope·(W_uk latent) + q_rope·k_rope
+    # absorb W_uk into q (the standard MLA decode trick): q_abs (B,H,r)
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    s = jnp.einsum("bhr,bsr->bhs", q_abs, lat_cache.astype(jnp.float32))
+    s = s + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32),
+                       kr_cache.astype(jnp.float32))
+    s = s / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    # out = p · V = p · (W_uv latent); absorb W_uv on the way out
+    ctx = jnp.einsum("bhs,bsr->bhr", p, lat_cache.astype(jnp.float32))
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv.astype(jnp.float32))
+    out = out.reshape(B, -1).astype(dtype)
+    return jnp.einsum("be,ed->bd", out, params["wo"])
+
+
+def mla_decode(params, cfg: ArchConfig, x, cache, step):
+    """One-token MLA decode against the compressed cache (dense
+    {latent, k_rope}, or paged {latent pool, k_rope pool, bt} — detected by
+    the ``bt`` key). ``step`` is the scalar absolute position, or a (B,)
+    int32 vector of per-row positions (continuous-batching decode); the
+    scalar path is untouched for bitwise parity with the step-synchronous
+    servers."""
+    B = x.shape[0]
     per_row = jnp.ndim(step) == 1
     pos = step[:, None] if per_row else jnp.full((B, 1), step, jnp.int32)
     q_nope, q_rope, latent, k_rope = _mla_qkv(params, cfg, x, pos)
+    if "bt" in cache:
+        from repro.kernels import dispatch
+        bt = cache["bt"]
+        M, page = bt.shape[1], cache["latent"].shape[1]
+        pos_vec = step if per_row else jnp.full((B,), step, jnp.int32)
+        glat, gkr, lat_pool, kr_pool = dispatch.paged_gather_append(
+            cache["latent"], cache["k_rope"], latent[:, 0], k_rope[:, 0, 0, :],
+            bt, pos_vec, backend=dispatch.kernel_backend())
+        L = M * page
+        lat_cache = glat.reshape(B, L, -1)
+        kr_cache = gkr.reshape(B, L, -1)
+        # sentinel rows (pos >= L) attend over all-zero pages with an
+        # all-true mask: finite garbage on a discarded row, never NaN
+        valid = (jnp.arange(L)[None, :] <= pos_vec[:, None]) | (
+            pos_vec[:, None] >= L)
+        out = _mla_attend(params, cfg, q_nope, q_rope, lat_cache, kr_cache,
+                          valid, x.dtype)
+        return out[:, None, :], {"latent": lat_pool, "k_rope": kr_pool,
+                                 "bt": bt}
     if per_row:
         rows = jnp.arange(B, dtype=jnp.int32)
         lat_cache = cache["latent"].at[rows, step].set(latent[:, 0])
@@ -116,23 +180,7 @@ def mla_decode(params, cfg: ArchConfig, x, cache, step):
                                                 (0, step, 0))
     Smax = lat_cache.shape[1]
     valid = (jnp.arange(Smax)[None, :] <= step[:, None] if per_row
-             else jnp.arange(Smax) <= step)         # (B, Smax) | (Smax,)
-    # score = q_nope·(W_uk latent) + q_rope·k_rope
-    # absorb W_uk into q (the standard MLA decode trick): q_abs (B,H,r)
-    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
-    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
-                       w_uk.astype(jnp.float32))
-    s = jnp.einsum("bhr,bsr->bhs", q_abs, lat_cache.astype(jnp.float32))
-    s = s + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32),
-                       kr_cache.astype(jnp.float32))
-    s = s / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
-    s = jnp.where(valid[:, None, :] if per_row else valid[None, None, :],
-                  s, -jnp.inf)
-    p = jax.nn.softmax(s, axis=-1)
-    # out = p · V = p · (W_uv latent); absorb W_uv on the way out
-    ctx = jnp.einsum("bhs,bsr->bhr", p, lat_cache.astype(jnp.float32))
-    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
-    out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv.astype(jnp.float32))
-    out = out.reshape(B, -1).astype(x.dtype)
-    out = jnp.einsum("be,ed->bd", out, params["wo"])
+             else jnp.broadcast_to(jnp.arange(Smax) <= step, (B, Smax)))
+    out = _mla_attend(params, cfg, q_nope, q_rope, lat_cache, kr_cache,
+                      valid, x.dtype)
     return out[:, None, :], {"latent": lat_cache, "k_rope": kr_cache}

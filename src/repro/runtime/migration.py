@@ -107,13 +107,18 @@ _DEVICE_STATE: Tuple[Tuple[str, int, bool], ...] = (
     ("_tok", 1, True), ("_pos", 1, True), ("_active_lane", 1, True),
     ("_start_lane", 1, True), ("_budget_lane", 1, True),
     ("_c1", 1, False), ("_rows", 2, True),
+    # the paged stage-2 page pool (None on dense schedulers / cold pools —
+    # the relayout loop skips None attrs); replicated like _c1: its leaves
+    # lead with page/superblock axes, never the batch axis
+    ("_pool", 2, False),
 )
 
 # host-side mutable containers snapshotted by shallow copy (``queue`` is a
 # serve_api.RequestQueue, which defines ``__copy__`` to clone its deque +
 # sid set together)
 _HOST_STATE = ("_sid", "_emitted", "_budget", "_state", "_free",
-               "_parked_fifo", "_pending", "queue", "results")
+               "_parked_fifo", "_pending", "queue", "results",
+               "_slot_pages", "_slot_len")
 
 
 class LiveMigrator:
@@ -169,11 +174,18 @@ class LiveMigrator:
                      "c_thr", "eager_drain_below", "active_cap"):
             snap[attr] = getattr(s, attr)
         chips = (s.stats.stage1_chips, s.stats.stage2_chips)
+        # the page allocator's free list: an EXACT state capture (its own
+        # defensive-copy snapshot — the lane is donated by frees, so a bare
+        # ref would not survive post-rollback serving)
+        alloc = getattr(s, "_alloc", None)
+        alloc_snap = alloc.snapshot() if alloc is not None else None
 
         def restore():
             for attr, val in snap.items():
                 setattr(s, attr, val)
             s.stats.stage1_chips, s.stats.stage2_chips = chips
+            if alloc is not None:
+                alloc.restore(alloc_snap)
         self._compensations.append(("restore-snapshot", restore))
 
     def _replace(self) -> None:
@@ -181,6 +193,14 @@ class LiveMigrator:
         s, plan = self.sched, self.plan
         new_pl = plan.placement if plan.placement is not None else s.placement
         new_fns = plan.fns if plan.fns is not None else s.fns
+        if getattr(s, "_paged", False) and (
+                getattr(new_fns, "s2_paged", None) is None
+                or getattr(new_fns, "page_size", None) != s.page_size):
+            raise MigrationError(
+                "a paged scheduler can only migrate onto stage fns built "
+                f"with the same page_size={s.page_size} "
+                "(decode_stage_fns(page_size=...)) — the live page pool's "
+                "layout is not convertible mid-serve")
         cap = (s.sc.capacity if plan.capacity is None
                else max(1, min(int(plan.capacity), s.n_slots)))
         new_sc = ServeConfig(capacity=cap, queue_depth=s.sc.queue_depth,
@@ -198,11 +218,17 @@ class LiveMigrator:
         # when the pool is cold (nothing admitted yet).
         if s._c1 is not None:
             for attr, stage, io in _DEVICE_STATE:
+                val = getattr(s, attr)
+                if val is None:              # e.g. _pool on a dense pool
+                    continue
                 ex = s.ex1 if stage == 1 else s.ex2
                 put = ex.place_io if io else ex.place
                 setattr(s, attr,
-                        faults.retry(put, getattr(s, attr),
-                                     what=f"relayout:{attr}"))
+                        faults.retry(put, val, what=f"relayout:{attr}"))
+            alloc = getattr(s, "_alloc", None)
+            if alloc is not None:
+                alloc.relayout(lambda x: faults.retry(
+                    s.ex2.place, x, what="relayout:_alloc"))
         s.stats.record_placement(new_pl)
 
     def _resume(self, t0: float) -> None:

@@ -127,8 +127,12 @@ class FleetStats:
     per-replica ``ServeStats`` (each replica dict is itself the versioned
     ``ServeStats`` schema). ``as_dict`` is versioned like the per-replica
     schema: adding/removing/renaming a top-level key bumps
-    ``SCHEMA_VERSION``."""
-    SCHEMA_VERSION = 1
+    ``SCHEMA_VERSION``.
+
+    v2 adds the fleet-wide paged-cache aggregates (sums of the per-replica
+    v3 gauges): ``fleet_cache_pages_total`` / ``fleet_cache_pages_in_use``
+    / ``fleet_cache_hbm_bytes`` / ``fleet_ring_bytes_moved``."""
+    SCHEMA_VERSION = 2
 
     def __init__(self, router: "FleetRouter"):
         self._router = router
@@ -168,6 +172,14 @@ class FleetStats:
                           - len(rt._pending) - sum(
                               t.inflight for t in rt.tenants.values())),
             "fleet_realized_q": self.fleet_realized_q,
+            "fleet_cache_pages_total": sum(
+                r.stats.cache_pages_total for r in rt.replicas),
+            "fleet_cache_pages_in_use": sum(
+                r.stats.cache_pages_in_use for r in rt.replicas),
+            "fleet_cache_hbm_bytes": sum(
+                r.stats.cache_hbm_bytes for r in rt.replicas),
+            "fleet_ring_bytes_moved": sum(
+                r.stats.ring_bytes_moved for r in rt.replicas),
             "health": list(rt.health),
             "tenants": {name: t.as_dict()
                         for name, t in sorted(rt.tenants.items())},

@@ -162,8 +162,18 @@ class ServeStats:
     Fields accreted ad hoc across PRs 2-6; from v2 on, adding/removing/
     renaming a key REQUIRES a version bump (and
     ``tests/test_serve_api.py`` freezes the key set). The schema is
-    documented in README's "Serving stats schema" section."""
-    SCHEMA_VERSION = 2
+    documented in README's "Serving stats schema" section.
+
+    v3 adds the paged-KV-cache memory economics: ``cache_pages_total`` /
+    ``cache_pages_in_use`` / ``cache_pages_free`` (the page allocator's
+    free-list view; all 0 for dense pools), ``cache_hbm_bytes`` (bytes the
+    KV store actually holds resident — the page pools when paged, the dense
+    slot store otherwise), ``page_fragmentation`` (1 − live_tokens /
+    (pages_in_use × page_size): the fraction of allocated page capacity not
+    holding a live token — tail-page waste), and ``ring_bytes_moved``
+    (cumulative bytes enqueued onto the stage-boundary ring; the hop-size
+    gauge the paged page-index payload is meant to shrink)."""
+    SCHEMA_VERSION = 3
     n_samples: int = 0
     n_decisions: int = 0
     n_exited: int = 0
@@ -196,6 +206,14 @@ class ServeStats:
     n_migration_rollbacks: int = 0
     migration_pauses_ms: Deque[float] = field(
         default_factory=lambda: deque(maxlen=1024), repr=False)
+    # paged-cache memory economics (v3): the owning scheduler/server keeps
+    # these current; dense pools leave the page counters at 0
+    cache_pages_total: int = 0
+    cache_pages_in_use: int = 0
+    cache_hbm_bytes: int = 0
+    cache_page_size: int = 0        # not emitted; fragmentation denominator
+    live_tokens: int = 0            # not emitted; fragmentation numerator
+    ring_bytes_moved: int = 0
 
     def record_decisions(self, n: int, n_hard: int) -> None:
         self.n_stage1_batches += 1
@@ -303,6 +321,20 @@ class ServeStats:
     def decisions_per_sample(self) -> float:
         return self.n_decisions / max(self.n_samples, 1)
 
+    @property
+    def cache_pages_free(self) -> int:
+        return max(self.cache_pages_total - self.cache_pages_in_use, 0)
+
+    @property
+    def page_fragmentation(self) -> float:
+        """Fraction of allocated page capacity not holding a live token
+        (tail-page internal fragmentation). 0.0 for dense pools / empty
+        allocators."""
+        cap = self.cache_pages_in_use * self.cache_page_size
+        if cap <= 0:
+            return 0.0
+        return float(min(max(1.0 - self.live_tokens / cap, 0.0), 1.0))
+
     def as_dict(self):
         return {"schema_version": self.SCHEMA_VERSION,
                 "n_samples": self.n_samples, "n_decisions": self.n_decisions,
@@ -325,6 +357,12 @@ class ServeStats:
                 "n_migration_rollbacks": self.n_migration_rollbacks,
                 "migration_pause_p50_ms": self.migration_pause_p50_ms,
                 "migration_pause_p99_ms": self.migration_pause_p99_ms,
+                "cache_pages_total": self.cache_pages_total,
+                "cache_pages_in_use": self.cache_pages_in_use,
+                "cache_pages_free": self.cache_pages_free,
+                "cache_hbm_bytes": self.cache_hbm_bytes,
+                "page_fragmentation": self.page_fragmentation,
+                "ring_bytes_moved": self.ring_bytes_moved,
                 "realized_q_series": list(self.realized_q_series)}
 
 
@@ -430,9 +468,18 @@ class RingQueue:
         self.size = sc.queue_depth * sc.capacity
         self._buf: Optional[dict] = None
         self.count = 0                    # host mirror of buf['count']
+        self._row_nbytes = 0              # per-row payload bytes (all leaves)
 
     def reset(self) -> None:
-        self._buf, self.count = None, 0
+        self._buf, self.count, self._row_nbytes = None, 0, 0
+
+    def _note_row_bytes(self) -> None:
+        """Cache the per-row payload size of the live buffer — the unit of
+        ``stats.ring_bytes_moved`` (a paged payload ships page *indices*
+        instead of cache rows, which is exactly what this gauge shows)."""
+        self._row_nbytes = sum(
+            int(np.prod(leaf.shape[1:])) * leaf.dtype.itemsize
+            for leaf in jax.tree.leaves(self._buf["data"]))
 
     def ensure(self, row_spec) -> dict:
         """Allocate (or return) the device buffer for payload rows shaped
@@ -441,6 +488,7 @@ class RingQueue:
         allocation to the first slab it sees."""
         if self._buf is None:
             self._buf = self.ex.place_io(ring_init(self.size, row_spec))
+            self._note_row_bytes()
         return self._buf
 
     def put_buf(self, buf: dict) -> None:
@@ -452,6 +500,7 @@ class RingQueue:
         """Advance the host count mirror for ``k`` rows a fused tick
         already wrote device-side."""
         self.count += k
+        self.stats.ring_bytes_moved += k * self._row_nbytes
 
     def enqueue(self, slab_tree, slab_ids, n_hard: int,
                 drain_one: Callable[[], None], off: int = 0,
@@ -471,6 +520,7 @@ class RingQueue:
                 lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
                 slab_tree)
             self._buf = self.ex.place_io(ring_init(self.size, spec))
+            self._note_row_bytes()
         while off < n_hard:
             free = self.size - self.count
             if free == 0:
@@ -490,6 +540,7 @@ class RingQueue:
             self._buf = _ring_enqueue_range(self._buf, slab_tree, slab_ids,
                                             off, off + take)
             self.count += take
+            self.stats.ring_bytes_moved += take * self._row_nbytes
             off += take
 
     def pop(self):
@@ -749,6 +800,161 @@ def _greedy_row(logits):
 
 
 # ---------------------------------------------------------------------------
+# device-resident page allocator: one int32 free-list lane whose prefix
+# [0, n_free) holds the free page ids (page 0 is the NULL page and is never
+# allocated). alloc slices the tail of the free prefix into a null-padded
+# block-table row WITHOUT touching the lane (the host n_free cursor is the
+# only mutation, so a failed admission needs no device rollback); free
+# compacts a row's live pages back onto the prefix end. Both are O(row)
+# jitted programs — no host loop over pages.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("max_pages",))
+def _alloc_row(lane, n_free, count, *, max_pages: int):
+    """Pop ``count`` pages off the free prefix's tail (lane[n_free-count :
+    n_free]) into a (max_pages,) block-table row, null-padded past
+    ``count``. Pure: the lane is read, never written."""
+    j = jnp.arange(max_pages, dtype=jnp.int32)
+    idx = jnp.clip(n_free - count + j, 0, lane.shape[0] - 1)
+    return jnp.where(j < count, jnp.take(lane, idx), 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("max_pages",))
+def _alloc_rows(lane, n_free, counts, *, max_pages: int):
+    """Batched ``_alloc_row``: pop ``counts[i]`` pages per row off the free
+    prefix's tail, LIFO in row order — row i reads the same lane slice the
+    i-th sequential ``_alloc_row`` call would, so one dispatch admits a
+    whole chunk. Pure like ``_alloc_row``."""
+    starts = n_free - jnp.cumsum(counts)
+    j = jnp.arange(max_pages, dtype=jnp.int32)[None, :]
+    idx = jnp.clip(starts[:, None] + j, 0, lane.shape[0] - 1)
+    return jnp.where(j < counts[:, None], jnp.take(lane, idx),
+                     0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _free_row(lane, n_free, bt_row):
+    """Return a block-table row's live pages (entries > 0) to the free
+    prefix: cumsum-compacted onto positions [n_free, n_free+count); null
+    entries scatter out of bounds and drop. Donated — the lane is updated
+    in place."""
+    valid = bt_row > 0
+    pos = jnp.cumsum(valid.astype(jnp.int32)) - 1
+    dst = jnp.where(valid, n_free + pos, lane.shape[0])
+    return lane.at[dst].set(bt_row, mode="drop")
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 2))
+def _free_slot_row(lane, n_free, rows, slot):
+    """Free-on-finish as ONE program: read slot ``slot``'s block-table row
+    out of the (n_slots, max_pages) lane, compact its live pages onto the
+    free prefix, and zero the row. Fusing the gather + free + clear keeps
+    the per-finish cost at a single jitted dispatch (three eager ops here
+    dominated the paged tick in profiles)."""
+    bt_row = rows[slot]
+    valid = bt_row > 0
+    pos = jnp.cumsum(valid.astype(jnp.int32)) - 1
+    dst = jnp.where(valid, n_free + pos, lane.shape[0])
+    return (lane.at[dst].set(bt_row, mode="drop"),
+            rows.at[slot].set(0))
+
+
+class PageAllocator:
+    """Free-list allocator over a shared KV page pool. ``n_pages`` counts
+    ALLOCATABLE pages — ids 1..n_pages; the pool arrays hold one extra page
+    at index 0, the all-zeros NULL page every padded block-table entry
+    points at. The free set lives on device (the lane) with a host-side
+    ``n_free`` cursor; allocation order is LIFO, which keeps recently-freed
+    (cache-warm) pages hot.
+
+    ``snapshot``/``restore`` give live migration an exact state capture:
+    the snapshot DEFENSIVELY COPIES the lane (``_free_row`` donates it, so
+    an aliased snapshot would be invalidated by the next free), and restore
+    copies again so one snapshot survives multiple rollbacks."""
+
+    def __init__(self, n_pages: int, page_size: int, ex=None):
+        if n_pages < 1:
+            raise ValueError(f"n_pages must be >= 1, got {n_pages}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        lane = jnp.arange(1, n_pages + 1, dtype=jnp.int32)
+        self._lane = ex.place_io(lane) if ex is not None else lane
+        self.n_free = n_pages
+
+    @staticmethod
+    def pages_for(span: int, page_size: int) -> int:
+        """Pages needed to hold a ``span``-token cache row (>= 1: even an
+        empty row owns its tail page)."""
+        return max(1, -(-int(span) // int(page_size)))
+
+    @property
+    def n_in_use(self) -> int:
+        return self.n_pages - self.n_free
+
+    def alloc(self, count: int, *, max_pages: int) -> jnp.ndarray:
+        """Allocate ``count`` pages as a null-padded (max_pages,) block-
+        table row. The caller checks ``n_free`` first — admission
+        backpressure is a policy decision, not an exception path."""
+        if count > max_pages:
+            raise ValueError(f"request needs {count} pages but a block "
+                             f"table row holds {max_pages}")
+        if count > self.n_free:
+            raise RuntimeError(f"page pool exhausted: need {count}, "
+                               f"free {self.n_free}/{self.n_pages}")
+        row = _alloc_row(self._lane, self.n_free, count,
+                         max_pages=max_pages)
+        self.n_free -= count
+        return row
+
+    def alloc_many(self, counts: List[int], *, max_pages: int):
+        """Allocate a chunk of block-table rows in ONE dispatch; row i gets
+        ``counts[i]`` pages, identical page ids to ``counts[i]`` sequential
+        ``alloc`` calls. Returns a (k, max_pages) i32 array."""
+        if any(c > max_pages for c in counts):
+            raise ValueError(f"request needs {max(counts)} pages but a "
+                             f"block table row holds {max_pages}")
+        total = sum(counts)
+        if total > self.n_free:
+            raise RuntimeError(f"page pool exhausted: need {total}, "
+                               f"free {self.n_free}/{self.n_pages}")
+        rows = _alloc_rows(self._lane, self.n_free,
+                           jnp.asarray(counts, jnp.int32),
+                           max_pages=max_pages)
+        self.n_free -= total
+        return rows
+
+    def free(self, bt_row, count: int) -> None:
+        """Return a block-table row's ``count`` live pages to the free
+        list."""
+        self._lane = _free_row(self._lane, self.n_free, bt_row)
+        self.n_free += count
+
+    def free_slot(self, rows, slot: int, count: int):
+        """Free slot ``slot``'s pages straight out of the (n_slots, M)
+        block-table lane and zero its row, one fused dispatch; returns the
+        updated lane (``rows`` is donated)."""
+        self._lane, rows = _free_slot_row(self._lane, self.n_free, rows,
+                                          slot)
+        self.n_free += count
+        return rows
+
+    def snapshot(self):
+        return jnp.array(self._lane, copy=True), self.n_free
+
+    def restore(self, snap) -> None:
+        lane, n_free = snap
+        self._lane = jnp.array(lane, copy=True)
+        self.n_free = int(n_free)
+
+    def relayout(self, place_fn) -> None:
+        """Re-place the lane onto a new submesh (live migration's device
+        re-split)."""
+        self._lane = place_fn(self._lane)
+
+
+# ---------------------------------------------------------------------------
 # the continuous slot scheduler
 # ---------------------------------------------------------------------------
 
@@ -788,7 +994,8 @@ class ContinuousScheduler:
     def __init__(self, fns, sc: ServeConfig, *, n_slots: int, max_len: int,
                  placement: Optional[StagePlacement] = None, clock=None,
                  eager_drain_below: Optional[int] = None,
-                 fns_factory: Optional[Callable] = None):
+                 fns_factory: Optional[Callable] = None,
+                 n_pages: Optional[int] = None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         self.fns = fns
@@ -821,6 +1028,35 @@ class ContinuousScheduler:
         self.stats = ServeStats()
         self.stats.record_placement(self.placement)
         self.ring = RingQueue(sc, self.ex2, self.stats)
+        # paged KV-cache mode: on iff the stage fns carry the paged decode
+        # surface (page_size + s2_paged + pool_init + admit_pages —
+        # serve_loop.decode_stage_fns(page_size=...)). The stage-2 row
+        # store becomes a shared PAGE POOL + a per-slot block-table lane
+        # (self._rows, reused verbatim as the ring payload's "cache" lane:
+        # a hop ships page INDICES, never cache rows), and capacity is
+        # measured in pages — ``n_pages`` allocatable pages (default: full
+        # dense equivalence, n_slots * max_len/page_size).
+        self.page_size = getattr(fns, "page_size", None)
+        self._paged = (self.page_size is not None
+                       and getattr(fns, "s2_paged", None) is not None)
+        self._pool = None                    # the paged stage-2 page pool
+        self._alloc: Optional[PageAllocator] = None
+        if self._paged:
+            if max_len % self.page_size != 0:
+                raise ValueError(
+                    f"max_len={max_len} must be a multiple of page_size="
+                    f"{self.page_size} (paged/dense bitwise parity needs "
+                    f"the gathered span == max_len)")
+            self.max_pages = max_len // self.page_size
+            self.n_pages = (int(n_pages) if n_pages is not None
+                            else n_slots * self.max_pages)
+            self._alloc = PageAllocator(self.n_pages, self.page_size,
+                                        ex=self.ex2)
+            self.stats.cache_pages_total = self.n_pages
+            self.stats.cache_page_size = self.page_size
+        elif n_pages is not None:
+            raise ValueError("n_pages given but fns carry no paged decode "
+                             "surface (decode_stage_fns(page_size=...))")
         # the transport-agnostic admission queue (runtime/serve_api.py):
         # owns FIFO order, the queued-sid set, submit-side validation and
         # the revocation primitive fleet preemption uses
@@ -832,6 +1068,10 @@ class ContinuousScheduler:
         self._emitted = [0] * n_slots
         self._budget = [0] * n_slots
         self._state = [_FREE] * n_slots
+        # paged bookkeeping: pages owned / prompt length per slot (live
+        # cache tokens = prompt + emitted - 1 — the fragmentation gauge)
+        self._slot_pages = [0] * n_slots
+        self._slot_len = [0] * n_slots
         self._free: List[int] = list(range(n_slots - 1, -1, -1))
         self.peak_busy = 0
         # per-slot hardness tally (hard decisions / decisions of the
@@ -943,9 +1183,22 @@ class ContinuousScheduler:
         if self._c1 is not None:
             return
         self._c1 = seg_pool_like(c1_row, self.n_slots)
-        self._rows = self.ex2.place_io(
-            jax.tree.map(lambda x: jnp.zeros((self.n_slots,) + x.shape[1:],
-                                             x.dtype), rows_row))
+        if self._paged:
+            # the slot-major store is the BLOCK-TABLE lane (zero rows =
+            # all-null tables); the actual cache bytes live in one shared
+            # page pool (+1 page: the NULL page at index 0)
+            self._rows = self.ex2.place_io(
+                jnp.zeros((self.n_slots, self.max_pages), jnp.int32))
+            self._pool = self.ex2.place_io(
+                self.fns.pool_init(rows_row, self.n_pages + 1))
+            self.stats.cache_hbm_bytes = sum(
+                leaf.nbytes for leaf in jax.tree.leaves(self._pool))
+        else:
+            self._rows = self.ex2.place_io(
+                jax.tree.map(lambda x: jnp.zeros(
+                    (self.n_slots,) + x.shape[1:], x.dtype), rows_row))
+            self.stats.cache_hbm_bytes = sum(
+                leaf.nbytes for leaf in jax.tree.leaves(self._rows))
         self._tok = self.ex1.place_io(jnp.zeros((self.n_slots, 1), jnp.int32))
         self._pos = self.ex1.place_io(jnp.zeros((self.n_slots,), jnp.int32))
         self._active_lane = self.ex1.place_io(jnp.zeros((self.n_slots,),
@@ -994,8 +1247,28 @@ class ContinuousScheduler:
             self._c1, self._tok, self._pos, self._active_lane,
             self._start_lane, self._budget_lane, logits0, c1_rows,
             self.ex1.place_io(slots_dev), S, self.ex1.place_io(budgets))
-        self._rows = _scatter_rows(self._rows, self.ex2.place_io(rows_rows),
-                                   self.ex2.place_io(slots_dev))
+        if self._paged:
+            # alloc-on-admit: one block-table row per request (the page-
+            # budget admission check in _try_admit guarantees the free
+            # list covers the chunk), then ONE fused pool scatter moves
+            # the chunk's prefill cache rows into their pages
+            needs = []
+            for r, slot in zip(reqs, slots):
+                need = PageAllocator.pages_for(S + r.n_tokens - 1,
+                                               self.page_size)
+                needs.append(need)
+                self._slot_pages[slot] = need
+                self._slot_len[slot] = S
+            bt_rows = self.ex2.place_io(
+                self._alloc.alloc_many(needs, max_pages=self.max_pages))
+            self._pool = self.fns.admit_pages(
+                self._pool, self.ex2.place_io(rows_rows), bt_rows)
+            self._rows = _scatter_rows(self._rows, bt_rows,
+                                       self.ex2.place_io(slots_dev))
+        else:
+            self._rows = _scatter_rows(self._rows,
+                                       self.ex2.place_io(rows_rows),
+                                       self.ex2.place_io(slots_dev))
         tok0_np = np.asarray(tok0)           # one admission sync per chunk
         for j, (r, slot) in enumerate(zip(reqs, slots)):
             self.results[r.sample_id] = [int(tok0_np[j])]
@@ -1023,11 +1296,26 @@ class ContinuousScheduler:
                 return
             now = self.clock.now()
             n_adm = 0
+            pages_acc = 0
             S0 = len(self.queue[0].prompt)
             for r in self.queue:
                 if (r.arrival_time > now or len(r.prompt) != S0
                         or n_adm >= headroom):
                     break
+                if self._paged:
+                    need = PageAllocator.pages_for(
+                        len(r.prompt) + r.n_tokens - 1, self.page_size)
+                    if need > self.n_pages:
+                        raise ValueError(
+                            f"request {r.sample_id} needs {need} pages but "
+                            f"the pool holds {self.n_pages} total — it can "
+                            "never be admitted")
+                    if pages_acc + need > self._alloc.n_free:
+                        # free-list empty(ish): admission BACKPRESSURE, not
+                        # a drop — the head request waits for pages to be
+                        # freed by finishing slots (attrition)
+                        break
+                    pages_acc += need
                 n_adm += 1
             if n_adm == 0:
                 return
@@ -1045,6 +1333,14 @@ class ContinuousScheduler:
         self._state[slot] = _FREE
         self._sid[slot] = -1
         self._free.append(slot)
+        if self._paged and self._slot_pages[slot] > 0:
+            # free-on-finish: the slot's pages go back on the free list and
+            # its device block-table row is zeroed — a later flush clone of
+            # this row must never let stage 2 append into recycled pages
+            self._rows = self._alloc.free_slot(self._rows, slot,
+                                               self._slot_pages[slot])
+            self._slot_pages[slot] = 0
+            self._slot_len[slot] = 0
         self.stats.record_finish(sid, self.clock.now())
         self._finished.append((sid, self._slot_hard[slot],
                                self._slot_dec[slot]))
@@ -1074,9 +1370,24 @@ class ContinuousScheduler:
         if popped is None:
             return
         bucket, ids, take = popped
-        logits, new_rows = self.fns.s2(bucket["h"], bucket["cache"],
-                                       bucket["step"])
-        self._rows = _scatter_rows(self._rows, new_rows, ids)
+        if self._paged:
+            # paged stage 2: the bucket's "cache" lane carries block-table
+            # rows (page indices — the whole ring hop is index-sized).
+            # Flush lanes (id -1) cloned a live slot's bt row out of the
+            # ring slab; sanitize them to the NULL table + sentinel step so
+            # the shared pool is never appended through a discarded row.
+            # The pool is donated through s2_paged and comes back updated —
+            # no scatter-back (pages are shared state, not slot rows).
+            from repro.runtime.serve_loop import _sanitize_paged_bucket
+            bt_safe, step_safe = _sanitize_paged_bucket(
+                bucket["cache"], ids, bucket["step"],
+                sentinel=self.max_len)
+            logits, self._pool = self.fns.s2_paged(
+                bucket["h"], bt_safe, step_safe, self._pool)
+        else:
+            logits, new_rows = self.fns.s2(bucket["h"], bucket["cache"],
+                                           bucket["step"])
+            self._rows = _scatter_rows(self._rows, new_rows, ids)
         toks = _greedy_row(logits)
         # ex2 -> ex1 hop: greedy tokens come home to the slot lanes
         self._tok, self._pos, self._active_lane = _unpark_lanes(
@@ -1219,6 +1530,17 @@ class ContinuousScheduler:
     def _n_state(self, state: int) -> int:
         return sum(1 for s in self._state if s == state)
 
+    def _refresh_page_stats(self) -> None:
+        """Fold the allocator's view + the host token tallies into the v3
+        stats fields (once per scheduler iteration — the gauges are cheap
+        host arithmetic)."""
+        if not self._paged:
+            return
+        self.stats.cache_pages_in_use = self._alloc.n_in_use
+        self.stats.live_tokens = sum(
+            self._slot_len[i] + self._emitted[i] - 1
+            for i in range(self.n_slots) if self._state[i] != _FREE)
+
     # -- ReplicaHandle introspection (serve_api.py) --------------------------
 
     @property
@@ -1267,6 +1589,7 @@ class ContinuousScheduler:
         self._maybe_migrate()                # discrete re-plan points only
         self._maybe_apply_capacity()
         self._try_admit()
+        self._refresh_page_stats()
         if self._n_state(_ACTIVE) > 0:
             self._tick()
             while self.ring.count >= self.sc.capacity:

@@ -237,7 +237,8 @@ _SCHEDULERS = (None, "sync", "continuous")
 def build(params, cfg, spec, sc, *, mode: str = "decode",
           scheduler: Optional[str] = "continuous", placement=None,
           n_slots: Optional[int] = None, max_len: Optional[int] = None,
-          clock=None, host: bool = False):
+          clock=None, host: bool = False, page_size: Optional[int] = None,
+          n_pages: Optional[int] = None):
     """Build a serving object for any (mode, scheduler) point — the single
     construction path ``launch/serve.py``, the benchmarks and the examples
     share (the old ``build_*`` factories in ``runtime/serve_loop.py`` are
@@ -261,7 +262,15 @@ def build(params, cfg, spec, sc, *, mode: str = "decode",
     ``placement`` disaggregates the two stages onto disjoint submeshes for
     any device-resident variant; ``clock`` (sync/continuous only) shares a
     time base across replicas — REQUIRED when the result joins a
-    ``FleetRouter`` fleet."""
+    ``FleetRouter`` fleet.
+
+    ``page_size`` switches the stage-2 KV store to the PAGED pool (decode
+    modes only): the stage fns gain the block-table decode surface, the
+    step-synchronous ``DecodeServer`` pages its generate-time cache, and
+    the continuous scheduler allocates pages on admit / frees on finish
+    over ``n_pages`` allocatable pages (default: dense-equivalent
+    capacity, ``n_slots * max_len / page_size`` — pass less to serve more
+    slots than the dense store could hold at the same HBM budget)."""
     from repro.runtime import serve_loop as SL
 
     if mode not in _MODES:
@@ -269,6 +278,15 @@ def build(params, cfg, spec, sc, *, mode: str = "decode",
     if scheduler not in _SCHEDULERS:
         raise ValueError(
             f"scheduler must be one of {_SCHEDULERS}, got {scheduler!r}")
+    if page_size is not None and mode != "decode":
+        raise ValueError("page_size is a decode-mode knob (the paged pool "
+                         "is the stage-2 decode cache)")
+    if n_pages is not None and page_size is None:
+        raise ValueError("n_pages needs page_size")
+    if n_pages is not None and scheduler != "continuous":
+        raise ValueError("n_pages sizes the continuous scheduler's page "
+                         "pool; the sync/bare paged servers are "
+                         "batch-sized")
     if mode == "prefill":
         if scheduler is not None:
             raise ValueError(
@@ -281,8 +299,12 @@ def build(params, cfg, spec, sc, *, mode: str = "decode",
     # decode
     if scheduler is None:
         fns = SL.decode_stage_fns(params, cfg, spec,
-                                  None if host else placement)
+                                  None if host else placement,
+                                  page_size=page_size)
         if host:
+            if page_size is not None:
+                raise ValueError("the host-loop oracle has no paged cache "
+                                 "(it IS the dense reference)")
             return SL.HostLoopDecoder(fns, sc)
         return SL.DecodeServer(fns, sc, placement)
     if host:
@@ -292,16 +314,20 @@ def build(params, cfg, spec, sc, *, mode: str = "decode",
         raise ValueError(f"scheduler={scheduler!r} needs n_slots")
     if scheduler == "sync":
         server = SL.DecodeServer(
-            SL.decode_stage_fns(params, cfg, spec, placement), sc, placement)
+            SL.decode_stage_fns(params, cfg, spec, placement,
+                                page_size=page_size), sc, placement)
         return SL.SyncScheduler(server, n_slots, clock=clock,
                                 max_len=max_len)
     if max_len is None:
         raise ValueError("scheduler='continuous' needs max_len (the pool's "
                          "shared cache width)")
     return SL.ContinuousScheduler(
-        SL.decode_stage_fns(params, cfg, spec, placement), sc,
+        SL.decode_stage_fns(params, cfg, spec, placement,
+                            page_size=page_size), sc,
         n_slots=n_slots, max_len=max_len, placement=placement, clock=clock,
-        fns_factory=lambda pl: SL.decode_stage_fns(params, cfg, spec, pl))
+        n_pages=n_pages,
+        fns_factory=lambda pl: SL.decode_stage_fns(params, cfg, spec, pl,
+                                                   page_size=page_size))
 
 
 _WARNED: set = set()

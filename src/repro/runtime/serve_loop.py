@@ -447,6 +447,103 @@ def cache_of_rows(rows: dict) -> dict:
             "rem": rows["rem"]}
 
 
+# ---------------------------------------------------------------------------
+# paged stage-2 cache: page pools + block tables instead of dense rows
+# ---------------------------------------------------------------------------
+
+def _is_layer_cache(node) -> bool:
+    """A per-layer decode cache dict: attention {k, v} or MLA
+    {latent, k_rope}. The only cache shapes the paged store accepts."""
+    return isinstance(node, dict) and (
+        ("k" in node and "v" in node) or "latent" in node)
+
+
+def _map_layer_caches(node, fn):
+    """Apply ``fn`` to every per-layer cache dict in a segment tree,
+    preserving the surrounding structure."""
+    if _is_layer_cache(node):
+        return fn(node)
+    if isinstance(node, dict):
+        return {k: _map_layer_caches(v, fn) for k, v in node.items()}
+    if isinstance(node, (list, tuple)):
+        return type(node)(_map_layer_caches(v, fn) for v in node)
+    return node
+
+
+def paged_seg_pool(rows: dict, page_size: int, n_pages: int) -> dict:
+    """Zero page-pool tree (run_layers layout) templated on a sample-major
+    stage-2 rows tree. 'blocks' leaves (B, n_sb, max_len, *F) become
+    (n_sb, n_pages, page, *F) pools; 'rem' layer leaves (B, max_len, *F)
+    become (n_pages, page, *F). Every leaf's position axis must be the SAME
+    max_len, a multiple of ``page_size`` — windowed ring caches, recurrent
+    state and cross-attention memory are not pageable and raise."""
+    if rows["first"]:
+        raise ValueError("stage-2 rows carry no 'first' caches; got a "
+                         "non-empty first segment — not pageable")
+    lens = set()
+
+    def _pool_leaf(x, lead):
+        L = x.shape[1 + lead]
+        if L % page_size != 0:
+            raise ValueError(f"cache position axis {L} is not a multiple of "
+                             f"page_size={page_size} — not pageable")
+        lens.add(L)
+        head = (x.shape[1],) if lead else ()
+        return jnp.zeros(head + (n_pages, page_size) + x.shape[2 + lead:],
+                         x.dtype)
+
+    def _check(node, lead):
+        if not _is_layer_cache(node):
+            raise ValueError(f"non-attention cache {jax.tree.structure(node)}"
+                             " — not pageable (windowed/recurrent/cross "
+                             "layers keep dense rows)")
+        if "bt" in node:
+            raise ValueError("rows template is already paged")
+        return {k: _pool_leaf(v, lead) for k, v in node.items()}
+
+    pool = {"first": [],
+            "blocks": _map_layer_caches(rows["blocks"],
+                                        lambda d: _check(d, 1)),
+            "rem": _map_layer_caches(rows["rem"], lambda d: _check(d, 0))}
+    if len(lens) > 1:
+        raise ValueError(f"inconsistent cache position axes {sorted(lens)} "
+                         "— not pageable")
+    return pool
+
+
+def _inject_bt(pool: dict, bt: jnp.ndarray) -> dict:
+    """Add the block table to every layer-cache dict of a pool tree:
+    'rem' layers get ``bt`` (B, M) directly; 'blocks' layers get it
+    broadcast over their leading superblock axis (scanned per layer)."""
+    def blocks_fn(d):
+        n_sb = next(iter(d.values())).shape[0]
+        return dict(d, bt=jnp.broadcast_to(bt[None], (n_sb,) + bt.shape))
+
+    return {"first": pool["first"],
+            "blocks": _map_layer_caches(pool["blocks"], blocks_fn),
+            "rem": _map_layer_caches(pool["rem"],
+                                     lambda d: dict(d, bt=bt))}
+
+
+def _strip_bt(seg: dict) -> dict:
+    """Inverse of ``_inject_bt``: drop the block-table leaves so the pool
+    tree keeps one structure (the table lane is scheduler state)."""
+    return _map_layer_caches(
+        seg, lambda d: {k: v for k, v in d.items() if k != "bt"})
+
+
+@functools.partial(jax.jit, static_argnames=("sentinel",))
+def _sanitize_paged_bucket(bt_rows, ids, step, sentinel: int):
+    """Flush / stale ring rows (ids < 0) must not touch the shared pool:
+    their block tables collapse to the null page and their write position
+    to the out-of-range sentinel, so the paged append drops and the gather
+    reads zeros. Live rows pass through untouched."""
+    bad = ids < 0
+    step = jnp.broadcast_to(jnp.asarray(step, jnp.int32), ids.shape)
+    return (jnp.where(bad[:, None], 0, bt_rows),
+            jnp.where(bad, sentinel, step))
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _merge_bucket_logits(merged, ids, logits):
     """Exit Merge, one bucket at a time: overwrite hard samples' rows of
@@ -484,10 +581,19 @@ class DecodeFns(NamedTuple):
     s1: Callable        # (tok (B,1), c1, step) -> (h (B,d), c1', exit_logits)
     s2: Callable        # (h (C,d), cache_rows, step) -> (logits, new_rows)
     s1_raw: Callable    # s1's body, un-jitted (continuous pool tick)
+    # paged stage-2 cache (None = dense). When set, the scheduler/server
+    # store the stage-2 cache as page pools + per-slot block tables; the
+    # ring's cache payload is the (max_pages,) i32 table row, not dense
+    # cache rows.
+    page_size: Optional[int] = None
+    s2_paged: Optional[Callable] = None   # (h, bt, step, pool) -> (logits, pool')
+    pool_init: Optional[Callable] = None  # (rows template, n_pages) -> pool
+    admit_pages: Optional[Callable] = None  # (pool, rows, bt_rows) -> pool'
 
 
 def decode_stage_fns(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
-                     placement: Optional[StagePlacement] = None) -> DecodeFns:
+                     placement: Optional[StagePlacement] = None,
+                     page_size: Optional[int] = None) -> DecodeFns:
     """Jitted decode callables with per-stage residency: the one-shot
     full-depth prefill (and its cache split) runs on ex1 with the full
     param tree, per-step stage 1 closes over the stage-1 slice on ex1, and
@@ -533,7 +639,56 @@ def decode_stage_fns(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
                                       presliced_params=presliced)
         return logits, cache_rows_of(nc)
 
-    return DecodeFns(pf, split, s1, s2, s1_raw)
+    if page_size is None:
+        return DecodeFns(pf, split, s1, s2, s1_raw)
+    if page_size < 1:
+        raise ValueError(f"page_size must be >= 1, got {page_size}")
+
+    @functools.partial(jax.jit, donate_argnums=(3,))
+    def s2_paged(h_rows, bt, step, pool):
+        logits, nc = ee.stage2_decode(p2, cfg, spec, h_rows[:, None],
+                                      _inject_bt(pool, bt), step,
+                                      presliced_params=presliced)
+        return logits, _strip_bt(nc)
+
+    def pool_init(rows, n_pages: int):
+        return paged_seg_pool(rows, page_size, n_pages)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def admit_pages(pool, rows, bt_rows):
+        """Scatter k admitted rows' DENSE stage-2 caches into their pages.
+        rows: sample-major tree, leaves (k, [n_sb,] L, *F); bt_rows:
+        (k, M) i32, null (0) tail entries land in the null page — every
+        such write carries the dense tail's zeros, so page 0 stays zero."""
+        k, M = bt_rows.shape
+
+        def rem_fn(d, r):
+            # pool (P, page, *F) <- rows (k, L, *F) paginated to (k*M, ...)
+            return jax.tree.map(
+                lambda p, x: p.at[bt_rows.reshape(-1)].set(
+                    x.reshape((k * M, page_size) + x.shape[2:]),
+                    mode="drop"),
+                d, r)
+
+        def blocks_fn(d, r):
+            # pool (n_sb, P, page, *F) <- rows (k, n_sb, L, *F)
+            def leaf(p, x):
+                n_sb = x.shape[1]
+                x = jnp.moveaxis(x, 0, 1).reshape(
+                    (n_sb, k * M, page_size) + x.shape[3:])
+                return p.at[:, bt_rows.reshape(-1)].set(x, mode="drop")
+            return jax.tree.map(leaf, d, r)
+
+        return {"first": [],
+                "blocks": jax.tree.map(blocks_fn, pool["blocks"],
+                                       rows["blocks"],
+                                       is_leaf=_is_layer_cache),
+                "rem": jax.tree.map(rem_fn, pool["rem"], rows["rem"],
+                                    is_leaf=_is_layer_cache)}
+
+    return DecodeFns(pf, split, s1, s2, s1_raw, page_size=page_size,
+                     s2_paged=s2_paged, pool_init=pool_init,
+                     admit_pages=admit_pages)
 
 
 def decode_step0_confidences(params, cfg: ArchConfig, spec: ee.EarlyExitSpec,
@@ -582,6 +737,9 @@ class DecodeServer(_RingedServer):
         self.fns = fns
         self._c1 = None          # stage-1 segment caches (run_layers layout)
         self._rows = None        # stage-2 segment cache, sample-major rows
+                                 # (paged mode: the (B, M) block-table lane)
+        self._pool = None        # paged mode: the stage-2 page pools
+        self._max_len = 0        # paged mode: the append sentinel
         self._ids = None         # arange(B) device constant
         self._pos = None         # current absolute position (drains need it)
         self._step_buckets: List[Tuple[jnp.ndarray, jnp.ndarray]] = []
@@ -593,9 +751,19 @@ class DecodeServer(_RingedServer):
         if popped is None:
             return
         bucket, bucket_ids = popped
-        logits, new_rows = self.fns.s2(bucket["h"], bucket["cache"],
-                                       self._pos)
-        self._rows = _scatter_rows(self._rows, new_rows, bucket_ids)
+        if self.fns.page_size is not None:
+            # shared pool: flush rows must not append (a flush slot clones
+            # batch row 0's payload — possibly an EASY row, whose stage-2
+            # pages must keep zeros at this step: exit-gap semantics)
+            bt_safe, step_safe = _sanitize_paged_bucket(
+                bucket["cache"], bucket_ids, self._pos,
+                sentinel=self._max_len)
+            logits, self._pool = self.fns.s2_paged(bucket["h"], bt_safe,
+                                                   step_safe, self._pool)
+        else:
+            logits, new_rows = self.fns.s2(bucket["h"], bucket["cache"],
+                                           self._pos)
+            self._rows = _scatter_rows(self._rows, new_rows, bucket_ids)
         self._step_buckets.append((bucket_ids, logits))
 
     def _step(self, tok, pos: int):
@@ -668,9 +836,36 @@ class DecodeServer(_RingedServer):
         self._ids = self.ex1.place_io(jnp.arange(B, dtype=jnp.int32))
         logits0, caches = self.fns.prefill(prompt, S + n_tokens)
         self._c1, rows = self.fns.split(caches)
-        # the stage-2 cache store migrates to its home submesh once, at
-        # stream start (prefill itself runs on ex1, which holds full params)
-        self._rows = self.ex2.place_io(rows)
+        if self.fns.page_size is not None:
+            # paged parity mode: an identity block table (row b owns pages
+            # [1 + b*M, 1 + (b+1)*M)) over a pool exactly sized for the
+            # batch — the dense oracle with the paged data path
+            page = self.fns.page_size
+            if (S + n_tokens) % page != 0:
+                raise ValueError(
+                    f"paged decode needs S + n_tokens divisible by "
+                    f"page_size={page}, got {S} + {n_tokens}")
+            self._max_len = S + n_tokens
+            M = self._max_len // page
+            bt = 1 + jnp.arange(B * M, dtype=jnp.int32).reshape(B, M)
+            rows = self.ex2.place_io(rows)
+            pool = self.ex2.place_io(self.fns.pool_init(rows, B * M + 1))
+            bt = self.ex2.place_io(bt)
+            self._pool = self.fns.admit_pages(pool, rows, bt)
+            self._rows = bt              # the ring's cache payload lane
+            self.stats.cache_pages_total = B * M
+            self.stats.cache_pages_in_use = B * M
+            self.stats.cache_page_size = page
+            # end-of-stream occupancy: every row fills its span
+            self.stats.live_tokens = B * (S + n_tokens - 1)
+            self.stats.cache_hbm_bytes = sum(
+                leaf.nbytes for leaf in jax.tree.leaves(self._pool))
+        else:
+            # the stage-2 cache store migrates to its home submesh once, at
+            # stream start (prefill runs on ex1, which holds full params)
+            self._rows = self.ex2.place_io(rows)
+            self.stats.cache_hbm_bytes = sum(
+                leaf.nbytes for leaf in jax.tree.leaves(self._rows))
         merged = logits0
         tok = _greedy_tokens(merged)         # t=0: from the prefill logits
         logits_out: List = [None] * n_tokens

@@ -234,10 +234,12 @@ def test_event_feed_streams_per_request_lifecycle():
     assert all(ev["tenant"] == "t" for ev in fin)
 
 
-_FLEET_V1_KEYS = frozenset({
+_FLEET_V2_KEYS = frozenset({
     "schema_version", "policy", "n_replicas", "n_pending", "n_submitted",
     "n_routed", "n_finished", "n_preemptions", "n_requeued", "n_degraded",
-    "n_dropped", "fleet_realized_q", "health", "tenants", "replicas",
+    "n_dropped", "fleet_realized_q", "fleet_cache_pages_total",
+    "fleet_cache_pages_in_use", "fleet_cache_hbm_bytes",
+    "fleet_ring_bytes_moved", "health", "tenants", "replicas",
 })
 
 
@@ -248,14 +250,14 @@ def test_fleet_stats_schema():
         router.submit(_req(i, n, tenant="t"))
     router.run()
     d = router.stats.as_dict()
-    assert set(d) == _FLEET_V1_KEYS
-    assert d["schema_version"] == router.stats.SCHEMA_VERSION == 1
+    assert set(d) == _FLEET_V2_KEYS
+    assert d["schema_version"] == router.stats.SCHEMA_VERSION == 2
     assert d["policy"] == "drift_aware" and d["n_replicas"] == 2
     assert d["health"] == [HEALTHY, HEALTHY]
     assert d["tenants"]["t"]["n_finished"] == 2
     # each replica entry is itself the versioned ServeStats schema, with
     # the provisioned p the router stamped
-    assert [r["schema_version"] for r in d["replicas"]] == [2, 2]
+    assert [r["schema_version"] for r in d["replicas"]] == [3, 3]
     assert [r["provisioned_p"] for r in d["replicas"]] == [0.2, 0.8]
 
 

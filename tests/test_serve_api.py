@@ -255,14 +255,16 @@ def test_deprecated_factories_warn_once_and_build(tiny_cfg, tiny_params,
 # ServeStats: the versioned, frozen schema
 # ---------------------------------------------------------------------------
 
-_SERVE_STATS_V2_KEYS = frozenset({
+_SERVE_STATS_V3_KEYS = frozenset({
     "schema_version", "n_samples", "n_decisions", "n_exited", "n_stage2",
     "n_stalls", "realized_q", "decisions_per_sample", "mean_bucket_fill",
     "stage1_chips", "stage2_chips", "stage1_occupancy", "stage2_occupancy",
     "n_finished", "latency_p50", "latency_p90", "latency_p99",
     "provisioned_p", "realized_q_ewma", "q_drift", "n_migrations",
     "n_migration_rollbacks", "migration_pause_p50_ms",
-    "migration_pause_p99_ms", "realized_q_series",
+    "migration_pause_p99_ms", "cache_pages_total", "cache_pages_in_use",
+    "cache_pages_free", "cache_hbm_bytes", "page_fragmentation",
+    "ring_bytes_moved", "realized_q_series",
 })
 
 
@@ -272,8 +274,8 @@ def test_serve_stats_schema_frozen():
     on purpose: bump ServeStats.SCHEMA_VERSION, update this set, and the
     README's serving-stats schema table.)"""
     d = ServeStats().as_dict()
-    assert set(d) == _SERVE_STATS_V2_KEYS
-    assert d["schema_version"] == ServeStats.SCHEMA_VERSION == 2
+    assert set(d) == _SERVE_STATS_V3_KEYS
+    assert d["schema_version"] == ServeStats.SCHEMA_VERSION == 3
 
 
 # baseline_cpu.json metric leaves that are sourced straight from a
@@ -283,6 +285,8 @@ _STATS_BACKED_LEAVES = {
     "migration_pause_p99_ms": "migration_pause_p99_ms",
     "n_migrations": "n_migrations",
     "n_rollbacks": "n_migration_rollbacks",
+    # serve_paged's ring gate is dense/paged ring_bytes_moved
+    "ring_bytes_ratio": "ring_bytes_moved",
 }
 
 
