@@ -21,7 +21,9 @@ import traceback
 # benchmarks/compare.py validates this before diffing; bump it whenever the
 # payload shape changes so a stale baseline fails loudly instead of quietly
 # comparing the wrong fields.
-SCHEMA_VERSION = 1
+# v2: envelope records jax_version / device_count alongside the backend, so
+# a perf diff between two CI runs is attributable to the runtime it ran on.
+SCHEMA_VERSION = 2
 
 
 def main(argv=None) -> int:
@@ -35,8 +37,8 @@ def main(argv=None) -> int:
 
     from benchmarks import (fig9_tap, kernel_dispatch, roofline,
                             serve_continuous, serve_decode, serve_drift,
-                            serve_fleet, serve_migration, serve_paged,
-                            serve_pipeline, table1_resources,
+                            serve_fleet, serve_migration, serve_observed,
+                            serve_paged, serve_pipeline, table1_resources,
                             table2_overhead, table3_throughput,
                             table4_networks)
     seeds = 1 if args.fast else 3
@@ -55,6 +57,7 @@ def main(argv=None) -> int:
         ("serve_drift", lambda: serve_drift.run(fast=args.fast)),
         ("serve_migration", lambda: serve_migration.run(fast=args.fast)),
         ("serve_fleet", lambda: serve_fleet.run(fast=args.fast)),
+        ("serve_observed", lambda: serve_observed.run(fast=args.fast)),
     ]
     if args.only and args.only not in {n for n, _ in benches}:
         ap.error(f"unknown benchmark {args.only!r}; "
@@ -83,6 +86,8 @@ def main(argv=None) -> int:
         import jax
         payload = {"schema_version": SCHEMA_VERSION,
                    "backend": jax.default_backend(),
+                   "jax_version": jax.__version__,
+                   "device_count": jax.device_count(),
                    "fast": bool(args.fast),
                    "benches": report}
         print(json.dumps(payload, indent=1, default=float))

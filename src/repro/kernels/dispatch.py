@@ -41,6 +41,17 @@ BACKENDS = ("auto", "pallas", "interpret", "ref")
 _ENV_VAR = "REPRO_KERNEL_BACKEND"
 _override: Optional[str] = None
 _resolve_cache: dict = {}
+_n_resolutions = 0
+
+
+def n_backend_resolutions() -> int:
+    """Lifetime count of ``kernel_backend`` memo MISSES (fresh platform
+    probes + validations). A steadily climbing value under a steady-state
+    server means something is thrashing the memo (e.g. a test sweeping
+    ``REPRO_FAULT_LOG``-style env state or ``set_backend`` churn) — the
+    observability plane exports it as
+    ``repro_backend_resolutions_total``."""
+    return _n_resolutions
 
 
 @functools.lru_cache(maxsize=1)
@@ -71,6 +82,8 @@ def kernel_backend(backend: Optional[str] = None) -> str:
     hit = _resolve_cache.get(key)
     if hit is not None:
         return hit
+    global _n_resolutions
+    _n_resolutions += 1
     req = backend or _override or env or "auto"
     if req not in BACKENDS:
         raise ValueError(f"unknown kernel backend {req!r}; "
@@ -147,16 +160,18 @@ def paged_gather_append(a_pool, b_pool, a_new, b_new, block_tables, pos, *,
     fa, fb = a_pool.shape[2:], b_pool.shape[2:]
     n_pages, page = a_pool.shape[:2]
     B, M = block_tables.shape
-    if backend == "ref":
-        ga, gb, ap, bp = paged_gather_append_ref(
-            a_pool, b_pool, a_new, b_new, block_tables, pos)
-        return ga, gb, ap, bp
-    ga, gb, ap, bp = paged_gather_append_pallas(
-        a_pool.reshape(n_pages, page, -1), b_pool.reshape(n_pages, page, -1),
-        a_new.reshape(B, -1), b_new.reshape(B, -1), block_tables, pos,
-        interpret=(backend == "interpret"))
-    return (ga.reshape((B, M, page) + fa), gb.reshape((B, M, page) + fb),
-            ap.reshape(a_pool.shape), bp.reshape(b_pool.shape))
+    with jax.named_scope("paged_gather_append"):
+        if backend == "ref":
+            ga, gb, ap, bp = paged_gather_append_ref(
+                a_pool, b_pool, a_new, b_new, block_tables, pos)
+            return ga, gb, ap, bp
+        ga, gb, ap, bp = paged_gather_append_pallas(
+            a_pool.reshape(n_pages, page, -1),
+            b_pool.reshape(n_pages, page, -1),
+            a_new.reshape(B, -1), b_new.reshape(B, -1), block_tables, pos,
+            interpret=(backend == "interpret"))
+        return (ga.reshape((B, M, page) + fa), gb.reshape((B, M, page) + fb),
+                ap.reshape(a_pool.shape), bp.reshape(b_pool.shape))
 
 
 @functools.partial(jax.jit, static_argnames=("backend",),
@@ -196,11 +211,13 @@ def fused_dispatch(logits, active, sample_ids, payload, ring, c_thr, *,
     pytree of (B, *row) leaves matching ring['data']. Returns
     (ring', exit_mask, pred, conf, src, n_hard); rows past the ring's free
     space are NOT written (caller handles overflow via src)."""
-    if backend == "ref":
-        return fused_dispatch_ref(logits, active, sample_ids, payload,
-                                  ring, c_thr)
-    return fused_dispatch_pallas(logits, active, sample_ids, payload, ring,
-                                 c_thr, interpret=(backend == "interpret"))
+    with jax.named_scope("fused_dispatch"):
+        if backend == "ref":
+            return fused_dispatch_ref(logits, active, sample_ids, payload,
+                                      ring, c_thr)
+        return fused_dispatch_pallas(logits, active, sample_ids, payload,
+                                     ring, c_thr,
+                                     interpret=(backend == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("backend",),

@@ -97,7 +97,8 @@ def fused_dispatch_pallas(logits, active, sample_ids, payload, ring, c_thr,
                              interpret=interpret)
         return out.reshape((size,) + feat)
 
-    data = jax.tree.map(merge, ring["data"], payload)
-    ids = merge(ring["ids"][:, None], sample_ids[:, None])[:, 0]
+    with jax.named_scope("fused_dispatch_scatter_merge"):
+        data = jax.tree.map(merge, ring["data"], payload)
+        ids = merge(ring["ids"][:, None], sample_ids[:, None])[:, 0]
     new_ring = {"data": data, "ids": ids, "head": head, "count": count + n_enq}
     return new_ring, exit_mask, pred, conf, src, n_hard

@@ -83,17 +83,18 @@ def paged_gather_append_pallas(a_pool: jnp.ndarray, b_pool: jnp.ndarray,
             pl.BlockSpec((1, page, fb), lambda b, p, bt, pos: (bt[b, p], 0, 0)),
         ],
     )
-    return pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((B, M, page, fa), a_pool.dtype),
-            jax.ShapeDtypeStruct((B, M, page, fb), b_pool.dtype),
-            jax.ShapeDtypeStruct(a_pool.shape, a_pool.dtype),
-            jax.ShapeDtypeStruct(b_pool.shape, b_pool.dtype),
-        ],
-        # flat pallas_call inputs = (bt, pos, a_pool, b_pool, a_new, b_new);
-        # the pools alias the in-place pool outputs (out indices 2 and 3)
-        input_output_aliases={2: 2, 3: 3},
-        interpret=interpret,
-    )(block_tables, pos, a_pool, b_pool, a_new, b_new)
+    with jax.named_scope("paged_gather_append_kernel"):
+        return pl.pallas_call(
+            kernel,
+            grid_spec=grid_spec,
+            out_shape=[
+                jax.ShapeDtypeStruct((B, M, page, fa), a_pool.dtype),
+                jax.ShapeDtypeStruct((B, M, page, fb), b_pool.dtype),
+                jax.ShapeDtypeStruct(a_pool.shape, a_pool.dtype),
+                jax.ShapeDtypeStruct(b_pool.shape, b_pool.dtype),
+            ],
+            # flat pallas_call inputs = (bt, pos, a_pool, b_pool, a_new,
+            # b_new); the pools alias the in-place pool outputs (2 and 3)
+            input_output_aliases={2: 2, 3: 3},
+            interpret=interpret,
+        )(block_tables, pos, a_pool, b_pool, a_new, b_new)

@@ -51,11 +51,24 @@ exit.
 devices, the ring + stage 2 on the next chips2, with ``--chips1/--chips2``
 defaulting to the p-proportional split of the local device set. Needs >= 2
 devices — on a CPU host export
-``XLA_FLAGS=--xla_force_host_platform_device_count=8`` first."""
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` first.
+
+Observability (``runtime/observe.py``; all opt-in, zero-cost when off):
+``--metrics-port N`` serves Prometheus text exposition on
+``127.0.0.1:N/metrics`` for the whole run (0 = ephemeral port; the CLI
+self-scrapes once before exit and asserts the exposition parses);
+``--metrics-dump FILE`` writes one exposition snapshot at end of run;
+``--spans-out FILE`` / ``--trace-out FILE`` export the per-request span
+trees as JSONL / Chrome ``trace_event`` JSON (open the latter in Perfetto
+or chrome://tracing); ``--profile-dir DIR`` captures a ``jax.profiler``
+trace window for the first ``--profile-ticks`` scheduler ticks. Span
+tracing and profiling need a scheduler (decode mode); the metrics flags
+work in every mode."""
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 from typing import Optional
 
@@ -118,6 +131,85 @@ def _parse_tenant_slos(spec: Optional[str]) -> dict:
     return out
 
 
+def _setup_observability(args):
+    """Build the observability plane for this run, or None when every flag
+    is off (the schedulers then carry no event feed at all)."""
+    wants = (args.metrics_port is not None or args.metrics_dump
+             or args.trace_out or args.spans_out or args.profile_dir)
+    if not wants:
+        return None
+    from repro.runtime import observe
+    from repro.runtime.telemetry import EventLog
+    registry = observe.MetricsRegistry()
+    return {"observe": observe, "registry": registry,
+            "tracer": observe.Tracer(),
+            "sampler": observe.StatsSampler(registry),
+            "make_events": lambda: EventLog(cap=65536),
+            "server": None}
+
+
+def _start_metrics_server(args, obs):
+    """Open the background /metrics endpoint for the run's duration."""
+    if obs is None or args.metrics_port is None:
+        return
+    observe = obs["observe"]
+    obs["server"] = observe.MetricsServer(
+        obs["registry"], obs["sampler"], port=args.metrics_port).start()
+    # stderr: stdout carries the one JSON payload consumers parse
+    print(f"# metrics: http://127.0.0.1:{obs['server'].port}/metrics",
+          file=sys.stderr)
+
+
+def _finalize_observability(args, obs, expect_sids=None) -> dict:
+    """Final sample + self-scrape + exports. Returns the JSON block the
+    payload carries under "observability"."""
+    observe = obs["observe"]
+    registry, sampler, tracer = obs["registry"], obs["sampler"], obs["tracer"]
+    sampler.sample()
+    out = {}
+    srv = obs["server"]
+    if srv is not None:
+        import urllib.request
+        try:
+            with urllib.request.urlopen(
+                    f"http://127.0.0.1:{srv.port}/metrics",
+                    timeout=10) as resp:
+                text = resp.read().decode()
+            # raises on malformed exposition — the CI smoke contract
+            out["metrics_scrape_samples"] = len(
+                observe.parse_exposition(text))
+            out["metrics_port"] = srv.port
+        finally:
+            srv.stop()
+    if args.metrics_dump:
+        observe.dump_metrics(registry, args.metrics_dump)
+        out["metrics_dump"] = args.metrics_dump
+    sampler.close()
+    tracer.close()
+    comp = tracer.completeness(expect_sids)
+    out["spans_complete"] = comp["complete"]
+    out["n_spans"] = comp["n_spans"]
+    out["n_span_annotations"] = comp["n_annotations"]
+    if args.spans_out:
+        out["n_span_lines"] = tracer.export_jsonl(args.spans_out)
+        out["spans_out"] = args.spans_out
+    if args.trace_out:
+        out["n_trace_events"] = tracer.export_chrome_trace(args.trace_out)
+        out["trace_out"] = args.trace_out
+    return out
+
+
+def _maybe_profile(args, obs, events):
+    """Context for the serving loop: a jax.profiler window when
+    --profile-dir is set, nullcontext otherwise."""
+    import contextlib
+    if obs is None or not args.profile_dir:
+        return contextlib.nullcontext()
+    return obs["observe"].ProfileWindow(args.profile_dir,
+                                        n_ticks=args.profile_ticks,
+                                        events=events)
+
+
 def _serve_fleet(args, cfg, spec, params, sc, placement) -> int:
     """Decode serving through a FleetRouter over --replicas continuous
     schedulers sharing one clock; requests cycle over the --tenant-slos
@@ -132,14 +224,25 @@ def _serve_fleet(args, cfg, spec, params, sc, placement) -> int:
         jax.random.PRNGKey(1), (args.requests, args.seq), 0, cfg.vocab))
     max_len = args.seq + args.decode_tokens
     clock = Clock()
+    obs = _setup_observability(args)
     replicas = [serve_api.build(params, cfg, spec, sc, mode="decode",
                                 scheduler="continuous", placement=placement,
                                 n_slots=args.batch, max_len=max_len,
                                 page_size=args.page_size,
-                                n_pages=args.n_pages, clock=clock)
+                                n_pages=args.n_pages, clock=clock,
+                                events=(obs["make_events"]() if obs
+                                        else None))
                 for _ in range(args.replicas)]
     router = FleetRouter(replicas, policy=args.routing_policy,
                          provisioned_p=[args.p] * args.replicas)
+    if obs is not None:
+        for r_i, rep in enumerate(replicas):
+            obs["tracer"].attach_scheduler(rep, replica=r_i)
+            obs["sampler"].attach_scheduler(rep, replica=r_i)
+        obs["tracer"].attach_router(router)
+        obs["tracer"].attach_faults()
+        obs["sampler"].attach_router(router)
+        _start_metrics_server(args, obs)
     arrivals = poisson_arrivals(args.requests, args.arrival_rate, seed=2)
     for i in range(args.requests):
         tenant = tenants[i % len(tenants)]
@@ -148,7 +251,8 @@ def _serve_fleet(args, cfg, spec, params, sc, placement) -> int:
                               arrival_time=float(arrivals[i]),
                               tenant=tenant,
                               slo_class=tenant_slos[tenant]))
-    results = router.run()
+    with _maybe_profile(args, obs, replicas[0].events):
+        results = router.run()
     makespan = router.clock.now()
     assert len(results) == args.requests
     assert all(len(v) == args.decode_tokens for v in results.values())
@@ -161,6 +265,9 @@ def _serve_fleet(args, cfg, spec, params, sc, placement) -> int:
                "n_replicas": args.replicas, "capacity": sc.capacity,
                "n_slots": args.batch, "arrival_rate": args.arrival_rate,
                "goodput_tokens_per_s": n_tok / makespan, **fleet}
+    if obs is not None:
+        payload["observability"] = _finalize_observability(
+            args, obs, expect_sids=set(range(args.requests)))
     print(json.dumps(payload, indent=1, default=float))
     return 0
 
@@ -239,7 +346,36 @@ def main(argv=None) -> int:
                     help="stage-1 submesh size (default: p-proportional)")
     ap.add_argument("--chips2", type=int, default=None,
                     help="stage-2 submesh size (default: p-proportional)")
+    grp = ap.add_argument_group("observability (runtime/observe.py)")
+    grp.add_argument("--metrics-port", type=int, default=None,
+                     help="serve Prometheus text exposition on "
+                          "127.0.0.1:PORT/metrics for the run (0 = "
+                          "ephemeral port, printed at startup); the CLI "
+                          "self-scrapes once before exit and asserts the "
+                          "exposition parses")
+    grp.add_argument("--metrics-dump", default=None, metavar="FILE",
+                     help="write one Prometheus exposition snapshot to "
+                          "FILE at end of run")
+    grp.add_argument("--spans-out", default=None, metavar="FILE",
+                     help="export per-request span trees + annotations as "
+                          "JSONL (decode schedulers)")
+    grp.add_argument("--trace-out", default=None, metavar="FILE",
+                     help="export the span trees as Chrome trace_event "
+                          "JSON — open in Perfetto / chrome://tracing "
+                          "(decode schedulers)")
+    grp.add_argument("--profile-dir", default=None, metavar="DIR",
+                     help="capture a jax.profiler trace window (xprof) "
+                          "into DIR")
+    grp.add_argument("--profile-ticks", type=int, default=64,
+                     help="scheduler ticks to keep the --profile-dir "
+                          "window open (default 64)")
     args = ap.parse_args(argv)
+
+    if args.mode == "prefill" and (args.trace_out or args.spans_out
+                                   or args.profile_dir):
+        raise SystemExit("span tracing / profiling rides the decode "
+                         "schedulers' event feed — use --mode decode "
+                         "(prefill supports the metrics flags)")
 
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
     spec = ee.default_spec(cfg, c_thr=args.c_thr)
@@ -261,12 +397,20 @@ def main(argv=None) -> int:
         prompts = np.asarray(jax.random.randint(
             jax.random.PRNGKey(1), (args.requests, args.seq), 0, cfg.vocab))
         max_len = args.seq + args.decode_tokens
+        obs = _setup_observability(args)
         sched = serve_api.build(params, cfg, spec, sc, mode="decode",
                                 scheduler=args.scheduler,
                                 placement=placement, n_slots=args.batch,
                                 max_len=max_len,
                                 page_size=args.page_size,
-                                n_pages=args.n_pages)
+                                n_pages=args.n_pages,
+                                events=(obs["make_events"]() if obs
+                                        else None))
+        if obs is not None:
+            obs["tracer"].attach_scheduler(sched)
+            obs["tracer"].attach_faults()
+            obs["sampler"].attach_scheduler(sched)
+            _start_metrics_server(args, obs)
         controller = None
         if args.controller:
             controller = DriftController(ControllerConfig(
@@ -284,7 +428,8 @@ def main(argv=None) -> int:
             sched.submit(Request(sample_id=i, prompt=prompts[i],
                                  n_tokens=args.decode_tokens,
                                  arrival_time=float(arrivals[i])))
-        results = sched.run()
+        with _maybe_profile(args, obs, sched.events):
+            results = sched.run()
         makespan = sched.clock.now()
         assert len(results) == args.requests
         assert all(len(v) == args.decode_tokens for v in results.values())
@@ -298,11 +443,18 @@ def main(argv=None) -> int:
                    **stats}
         if controller is not None:
             payload["controller"] = controller.state.as_dict()
+        if obs is not None:
+            payload["observability"] = _finalize_observability(
+                args, obs, expect_sids=set(range(args.requests)))
         print(json.dumps(payload, indent=1, default=float))
         return 0
 
+    obs = _setup_observability(args)
     server = serve_api.build(params, cfg, spec, sc, mode="prefill",
                              scheduler=None, placement=placement)
+    if obs is not None:
+        obs["sampler"].attach_scheduler(server)   # stats-only (no events)
+        _start_metrics_server(args, obs)
     toks = np.asarray(jax.random.randint(
         jax.random.PRNGKey(1), (args.requests, args.seq), 0, cfg.vocab))
     t0 = time.perf_counter()
@@ -310,9 +462,11 @@ def main(argv=None) -> int:
     dt = time.perf_counter() - t0
     assert len(results) == args.requests
     stats = _summarized_stats(server.stats)
-    print(json.dumps({"arch": args.arch, "mode": "prefill", "capacity": cap,
-                      "throughput_samples_per_s": args.requests / dt,
-                      **stats}, indent=1))
+    payload = {"arch": args.arch, "mode": "prefill", "capacity": cap,
+               "throughput_samples_per_s": args.requests / dt, **stats}
+    if obs is not None:
+        payload["observability"] = _finalize_observability(args, obs)
+    print(json.dumps(payload, indent=1))
     return 0
 
 

@@ -42,7 +42,6 @@ single module-global ``None`` check — the hot loops pay nanoseconds.
 from __future__ import annotations
 
 import atexit
-import json
 import os
 import time
 from dataclasses import dataclass, field
@@ -275,16 +274,19 @@ def flush_log(path: Optional[str] = None) -> Optional[str]:
     """Append the event log as JSON lines to ``path`` (default:
     ``REPRO_FAULT_LOG``; no-op when neither is set). Appending keeps one
     artifact across a multi-process sweep; each line carries the pid and
-    the plan spec that was armed."""
+    the plan spec that was armed.
+
+    Writes through ``observe.export_events_jsonl`` — the ONE event-feed
+    exporter the observability plane uses — so the fault artifact and the
+    request-span JSONL share a line format and dropped-event accounting
+    (``LOG.n_dropped``) instead of maintaining a private serializer."""
     path = path or os.environ.get(ENV_LOG)
     if not path or not len(LOG):
         return None
     plan = active_plan()
     spec = plan.origin if plan is not None else ""
-    with open(path, "a") as f:
-        for ev in LOG.as_list():
-            f.write(json.dumps({"pid": os.getpid(), "plan": spec, **ev},
-                               default=str) + "\n")
+    from repro.runtime import observe
+    observe.export_events_jsonl(path, LOG, pid=os.getpid(), plan=spec)
     LOG.clear()
     return path
 

@@ -254,13 +254,18 @@ class LiveMigrator:
         t0 = time.perf_counter()
         stage = "quiesce"
         try:
+            self._stage_event("quiesce")
             self._quiesce()
             stage = "snapshot"
+            self._stage_event("snapshot")
             self._snapshot()
             stage = "replace"
+            self._stage_event("replace")
             self._replace()
             stage = "resume"
+            self._stage_event("resume")
             self._resume(t0)
+            self._stage_event("done", pause_ms=self.pause_ms)
             return self.pause_ms
         except BaseException as exc:
             self._rollback(stage, exc)
@@ -279,8 +284,18 @@ class LiveMigrator:
             comp()
         self._compensations.clear()
         self.sched.stats.record_migration_rollback()
+        self._stage_event("rollback", failed_stage=stage)
         faults.LOG.emit("migration_rollback", reason=self.plan.reason,
                         failed_stage=stage, error=str(exc))
+
+    def _stage_event(self, stage: str, **fields) -> None:
+        """Annotate the scheduler's request-lifecycle feed (when wired)
+        with the migration state machine's transitions — the tracer
+        renders them as control-track instants alongside the request
+        spans they pause."""
+        ev = getattr(self.sched, "events", None)
+        if ev is not None:
+            ev.emit(f"migrate_{stage}", reason=self.plan.reason, **fields)
 
 
 def migrate_on_device_loss(sched: ContinuousScheduler, failed,

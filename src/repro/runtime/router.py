@@ -390,7 +390,9 @@ class FleetRouter:
         tenant.inflight += 1
         self.stats.n_routed += 1
         self.events.emit("route", sid=req.sample_id, tenant=req.tenant,
-                         slo=req.slo_class, replica=i, policy=self.policy)
+                         slo=req.slo_class, replica=i, policy=self.policy,
+                         queue_len=self.replicas[i].queue_len,
+                         n_busy=self.replicas[i].n_busy)
         return True
 
     def _route(self) -> int:

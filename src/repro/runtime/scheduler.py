@@ -66,7 +66,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import dispatch
-from repro.runtime import faults, telemetry
+from repro.runtime import faults, observe, telemetry
 from repro.runtime.serve_api import RequestQueue
 from repro.runtime.stage_executor import StagePlacement
 
@@ -398,21 +398,22 @@ def _ring_enqueue_range(buf: dict, slab, slab_ids, lo, hi) -> dict:
     pytree matching buf['data'] rows (every leaf (n, *row_leaf)). The donated
     buffer is updated in place; unselected rows scatter out of bounds and
     are dropped. The caller guarantees the selected range fits."""
-    size = buf["ids"].shape[0]
-    n = slab_ids.shape[0]
-    n_valid = jnp.sum(slab_ids >= 0).astype(jnp.int32)
-    upper = jnp.minimum(hi, n_valid)
-    lanes = jnp.arange(n, dtype=jnp.int32)
-    sel = (lanes >= lo) & (lanes < upper)
-    idx = (buf["head"] + buf["count"] + lanes - lo) % size
-    idx = jnp.where(sel, idx, size)                  # OOB -> dropped
-    return {
-        "data": jax.tree.map(lambda d, s: d.at[idx].set(s, mode="drop"),
-                             buf["data"], slab),
-        "ids": buf["ids"].at[idx].set(slab_ids, mode="drop"),
-        "head": buf["head"],
-        "count": buf["count"] + jnp.maximum(upper - lo, 0),
-    }
+    with jax.named_scope("ring_enqueue"):
+        size = buf["ids"].shape[0]
+        n = slab_ids.shape[0]
+        n_valid = jnp.sum(slab_ids >= 0).astype(jnp.int32)
+        upper = jnp.minimum(hi, n_valid)
+        lanes = jnp.arange(n, dtype=jnp.int32)
+        sel = (lanes >= lo) & (lanes < upper)
+        idx = (buf["head"] + buf["count"] + lanes - lo) % size
+        idx = jnp.where(sel, idx, size)              # OOB -> dropped
+        return {
+            "data": jax.tree.map(lambda d, s: d.at[idx].set(s, mode="drop"),
+                                 buf["data"], slab),
+            "ids": buf["ids"].at[idx].set(slab_ids, mode="drop"),
+            "head": buf["head"],
+            "count": buf["count"] + jnp.maximum(upper - lo, 0),
+        }
 
 
 def ring_enqueue(buf: dict, slab, slab_ids: jnp.ndarray) -> dict:
@@ -428,21 +429,23 @@ def ring_drain(buf: dict, capacity: int):
     bucket_ids (capacity,)) — slots past the take carry id -1 (flush) and
     whatever stale rows the ring holds (stage 2 is row-independent, flush
     rows are discarded by the exit merge)."""
-    size = buf["ids"].shape[0]
-    take_n = jnp.minimum(buf["count"], capacity).astype(jnp.int32)
-    lanes = jnp.arange(capacity, dtype=jnp.int32)
-    idx = (buf["head"] + lanes) % size
-    valid = lanes < take_n
-    bucket = jax.tree.map(lambda d: jnp.take(d, idx, axis=0), buf["data"])
-    bucket_ids = jnp.where(valid, jnp.take(buf["ids"], idx), -1)
-    new = {
-        "data": buf["data"],
-        "ids": buf["ids"].at[jnp.where(valid, idx, size)].set(
-            -1, mode="drop"),
-        "head": (buf["head"] + take_n) % size,
-        "count": buf["count"] - take_n,
-    }
-    return new, bucket, bucket_ids
+    with jax.named_scope("ring_drain"):
+        size = buf["ids"].shape[0]
+        take_n = jnp.minimum(buf["count"], capacity).astype(jnp.int32)
+        lanes = jnp.arange(capacity, dtype=jnp.int32)
+        idx = (buf["head"] + lanes) % size
+        valid = lanes < take_n
+        bucket = jax.tree.map(lambda d: jnp.take(d, idx, axis=0),
+                              buf["data"])
+        bucket_ids = jnp.where(valid, jnp.take(buf["ids"], idx), -1)
+        new = {
+            "data": buf["data"],
+            "ids": buf["ids"].at[jnp.where(valid, idx, size)].set(
+                -1, mode="drop"),
+            "head": (buf["head"] + take_n) % size,
+            "count": buf["count"] - take_n,
+        }
+        return new, bucket, bucket_ids
 
 
 class RingQueue:
@@ -699,24 +702,26 @@ def _pool_tick(tok, c1, pos, active, start, budget, c_thr, *, s1, backend):
     hard mask, emitted tokens, new tok lane, new pos lane, new active,
     per-slot exit confidences — the controller's reservoir feed, already
     computed by the fused decision kernel so exposing it is free)."""
-    h, nc1, exit_logits = s1(tok, c1, pos)
-    nc1 = _seg_select(active, nc1, c1)
-    # the decision kernel's pred IS the greedy token — one logits pass
-    # serves both the exit decision and the emitted token
-    exit_mask, pred, conf = dispatch.exit_decision_op(exit_logits, c_thr,
-                                                      backend=backend)
-    easy = active & exit_mask
-    hard = active & ~exit_mask
-    n = tok.shape[0]
-    slab, src, n_hard = dispatch.gather_compact_op(h, hard, n,
-                                                   backend=backend)
-    slab_slots = src                          # slot index IS the ring id
-    slab_steps = jnp.where(src >= 0, jnp.take(pos, jnp.maximum(src, 0)), 0)
-    new_tok = jnp.where(easy[:, None], pred[:, None], tok)
-    new_pos = pos + easy.astype(jnp.int32)
-    new_active = easy & (new_pos - start + 1 < budget)
-    return (nc1, slab, slab_slots, slab_steps, n_hard, easy, hard, pred,
-            new_tok, new_pos, new_active, conf)
+    with jax.named_scope("pool_tick"):
+        h, nc1, exit_logits = s1(tok, c1, pos)
+        nc1 = _seg_select(active, nc1, c1)
+        # the decision kernel's pred IS the greedy token — one logits pass
+        # serves both the exit decision and the emitted token
+        exit_mask, pred, conf = dispatch.exit_decision_op(exit_logits, c_thr,
+                                                          backend=backend)
+        easy = active & exit_mask
+        hard = active & ~exit_mask
+        n = tok.shape[0]
+        slab, src, n_hard = dispatch.gather_compact_op(h, hard, n,
+                                                       backend=backend)
+        slab_slots = src                      # slot index IS the ring id
+        slab_steps = jnp.where(src >= 0, jnp.take(pos, jnp.maximum(src, 0)),
+                               0)
+        new_tok = jnp.where(easy[:, None], pred[:, None], tok)
+        new_pos = pos + easy.astype(jnp.int32)
+        new_active = easy & (new_pos - start + 1 < budget)
+        return (nc1, slab, slab_slots, slab_steps, n_hard, easy, hard, pred,
+                new_tok, new_pos, new_active, conf)
 
 
 @functools.partial(jax.jit, donate_argnums=(1, 6),
@@ -736,20 +741,21 @@ def _pool_tick_fused(tok, c1, pos, active, start, budget, ring, rows, c_thr,
 
     Only valid on a non-disaggregated placement (one submesh cannot span
     two)."""
-    h, nc1, exit_logits = s1(tok, c1, pos)
-    nc1 = _seg_select(active, nc1, c1)
-    n = tok.shape[0]
-    lanes = jnp.arange(n, dtype=jnp.int32)     # slot index IS the ring id
-    payload = {"h": h, "cache": rows, "step": pos}
-    ring, exit_mask, pred, conf, src, n_hard = dispatch.fused_dispatch(
-        exit_logits, active, lanes, payload, ring, c_thr, backend=backend)
-    easy = active & exit_mask
-    hard = active & ~exit_mask
-    new_tok = jnp.where(easy[:, None], pred[:, None], tok)
-    new_pos = pos + easy.astype(jnp.int32)
-    new_active = easy & (new_pos - start + 1 < budget)
-    return (nc1, ring, h, src, n_hard, easy, hard, pred, new_tok, new_pos,
-            new_active, conf)
+    with jax.named_scope("pool_tick_fused"):
+        h, nc1, exit_logits = s1(tok, c1, pos)
+        nc1 = _seg_select(active, nc1, c1)
+        n = tok.shape[0]
+        lanes = jnp.arange(n, dtype=jnp.int32)  # slot index IS the ring id
+        payload = {"h": h, "cache": rows, "step": pos}
+        ring, exit_mask, pred, conf, src, n_hard = dispatch.fused_dispatch(
+            exit_logits, active, lanes, payload, ring, c_thr, backend=backend)
+        easy = active & exit_mask
+        hard = active & ~exit_mask
+        new_tok = jnp.where(easy[:, None], pred[:, None], tok)
+        new_pos = pos + easy.astype(jnp.int32)
+        new_active = easy & (new_pos - start + 1 < budget)
+        return (nc1, ring, h, src, n_hard, easy, hard, pred, new_tok,
+                new_pos, new_active, conf)
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4, 5))
@@ -995,10 +1001,16 @@ class ContinuousScheduler:
                  placement: Optional[StagePlacement] = None, clock=None,
                  eager_drain_below: Optional[int] = None,
                  fns_factory: Optional[Callable] = None,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None, events=None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         self.fns = fns
+        # optional request-lifecycle feed (telemetry.EventLog): when set,
+        # the scheduler emits submit/admit/park/bucket/finish/tick events
+        # the observability plane (runtime/observe.Tracer) assembles into
+        # per-request span trees. None (the default) costs the hot path
+        # one attribute check per emission site.
+        self.events = events
         # fns_factory(placement) -> DecodeFns rebuilds the stage callables
         # against a NEW placement (re-slicing params per ee.split_params
         # onto its submeshes) — the hook live migration needs to perform a
@@ -1178,6 +1190,10 @@ class ContinuousScheduler:
         the queue's push, so a malformed request is rejected before it
         can damage in-flight state mid-admission."""
         self.queue.append(req)
+        if self.events is not None:
+            self.events.emit("submit", sid=req.sample_id,
+                             arrival=req.arrival_time,
+                             n_tokens=req.n_tokens)
 
     def _ensure_pool(self, c1_row, rows_row) -> None:
         if self._c1 is not None:
@@ -1278,6 +1294,9 @@ class ContinuousScheduler:
             self._state[slot] = _ACTIVE
             self._slot_hard[slot] = 0
             self._slot_dec[slot] = 0
+            if self.events is not None:
+                self.events.emit("admit", sid=r.sample_id, slot=slot,
+                                 prompt_len=S)
             if r.n_tokens == 1:              # prefill-only: free right away
                 self._finish_slot(slot)
         self.peak_busy = max(self.peak_busy, self.n_slots - len(self._free))
@@ -1344,6 +1363,10 @@ class ContinuousScheduler:
         self.stats.record_finish(sid, self.clock.now())
         self._finished.append((sid, self._slot_hard[slot],
                                self._slot_dec[slot]))
+        if self.events is not None:
+            self.events.emit("finish", sid=sid,
+                             n_hard=self._slot_hard[slot],
+                             n_decisions=self._slot_dec[slot])
 
     def _advance_slot(self, slot: int) -> None:
         """One token emitted for this slot: finish when the budget is
@@ -1370,24 +1393,26 @@ class ContinuousScheduler:
         if popped is None:
             return
         bucket, ids, take = popped
-        if self._paged:
-            # paged stage 2: the bucket's "cache" lane carries block-table
-            # rows (page indices — the whole ring hop is index-sized).
-            # Flush lanes (id -1) cloned a live slot's bt row out of the
-            # ring slab; sanitize them to the NULL table + sentinel step so
-            # the shared pool is never appended through a discarded row.
-            # The pool is donated through s2_paged and comes back updated —
-            # no scatter-back (pages are shared state, not slot rows).
-            from repro.runtime.serve_loop import _sanitize_paged_bucket
-            bt_safe, step_safe = _sanitize_paged_bucket(
-                bucket["cache"], ids, bucket["step"],
-                sentinel=self.max_len)
-            logits, self._pool = self.fns.s2_paged(
-                bucket["h"], bt_safe, step_safe, self._pool)
-        else:
-            logits, new_rows = self.fns.s2(bucket["h"], bucket["cache"],
-                                           bucket["step"])
-            self._rows = _scatter_rows(self._rows, new_rows, ids)
+        with observe.annotate("stage2_bucket_dispatch"):
+            if self._paged:
+                # paged stage 2: the bucket's "cache" lane carries block-
+                # table rows (page indices — the whole ring hop is index-
+                # sized). Flush lanes (id -1) cloned a live slot's bt row
+                # out of the ring slab; sanitize them to the NULL table +
+                # sentinel step so the shared pool is never appended
+                # through a discarded row. The pool is donated through
+                # s2_paged and comes back updated — no scatter-back (pages
+                # are shared state, not slot rows).
+                from repro.runtime.serve_loop import _sanitize_paged_bucket
+                bt_safe, step_safe = _sanitize_paged_bucket(
+                    bucket["cache"], ids, bucket["step"],
+                    sentinel=self.max_len)
+                logits, self._pool = self.fns.s2_paged(
+                    bucket["h"], bt_safe, step_safe, self._pool)
+            else:
+                logits, new_rows = self.fns.s2(bucket["h"], bucket["cache"],
+                                               bucket["step"])
+                self._rows = _scatter_rows(self._rows, new_rows, ids)
         toks = _greedy_row(logits)
         # ex2 -> ex1 hop: greedy tokens come home to the slot lanes
         self._tok, self._pos, self._active_lane = _unpark_lanes(
@@ -1401,11 +1426,20 @@ class ContinuousScheduler:
         # at harvest, bounded by max_pending like the sync servers'
         # backlogs
         entries = []
+        popped_slots = []
         for _ in range(take):
             slot = self._parked_fifo.popleft()
             sid = self._sid[slot]
             entries.append((sid, len(self.results[sid])))
             self.results[sid].append(None)       # filled at harvest
+            popped_slots.append(slot)
+        if self.events is not None:
+            # bucket BEFORE the advance: a request finishing off this
+            # bucket must close its stage-2 park span first
+            self.events.emit("bucket",
+                             sids=tuple(self._sid[s] for s in popped_slots),
+                             take=take, capacity=self.sc.capacity)
+        for slot in popped_slots:
             self._advance_slot(slot)
         self._pending.append((entries, toks))
         while len(self._pending) > self.sc.max_pending:
@@ -1449,11 +1483,14 @@ class ContinuousScheduler:
         controller's reservoir feed), fetched together. Emits easy tokens
         and feeds the controller; returns the host-side pieces the hard
         path needs."""
-        n_hard, easy_np, hard_np, emit_np, conf_np = jax.device_get(
-            (n_hard_dev, easy, hard, pred, conf))
+        with observe.annotate("finish_tick_sync"):
+            n_hard, easy_np, hard_np, emit_np, conf_np = jax.device_get(
+                (n_hard_dev, easy, hard, pred, conf))
         n_hard = int(n_hard)
         n_dec = int(easy_np.sum()) + n_hard
         self.stats.record_decisions(n_dec, n_hard)
+        if self.events is not None:
+            self.events.emit("tick", n_decisions=n_dec, n_hard=n_hard)
         if self.controller is not None:
             # SENSE: only live rows' confidences are real (free/parked rows
             # compute garbage that the masks discard)
@@ -1465,18 +1502,27 @@ class ContinuousScheduler:
         return n_hard, hard_np
 
     def _park_hard(self, hard_np) -> None:
+        parked = []
         for i in np.nonzero(hard_np)[0]:         # ascending = slab order
             self._slot_dec[int(i)] += 1
             self._slot_hard[int(i)] += 1
             self._state[int(i)] = _PARKED
             self._parked_fifo.append(int(i))
+            parked.append(int(i))
+        if self.events is not None and parked:
+            # one batched event per tick (like "bucket"): the park feed is
+            # hot-path, and per-row emits would dominate the event volume
+            self.events.emit("park",
+                             sids=tuple(self._sid[s] for s in parked),
+                             slots=tuple(parked))
 
     def _tick_composed(self) -> None:
-        (self._c1, slab, slots, steps, n_hard_dev, easy, hard, pred,
-         self._tok, self._pos, self._active_lane, conf) = _pool_tick(
-            self._tok, self._c1, self._pos, self._active_lane,
-            self._start_lane, self._budget_lane, self.c_thr,
-            s1=self.fns.s1_raw, backend=dispatch.kernel_backend())
+        with observe.annotate("pool_tick"):
+            (self._c1, slab, slots, steps, n_hard_dev, easy, hard, pred,
+             self._tok, self._pos, self._active_lane, conf) = _pool_tick(
+                self._tok, self._c1, self._pos, self._active_lane,
+                self._start_lane, self._budget_lane, self.c_thr,
+                s1=self.fns.s1_raw, backend=dispatch.kernel_backend())
         n_hard, hard_np = self._finish_tick(n_hard_dev, easy, hard, pred,
                                             conf)
         if n_hard > 0:
@@ -1488,18 +1534,22 @@ class ContinuousScheduler:
             cache_slab = _gather_rows(self._rows, slots2)
             # retried: the enqueue fault boundary sits before any ring
             # mutation, so a transient failure re-runs the whole enqueue
-            faults.retry(self.ring.enqueue,
-                         {"h": slab, "cache": cache_slab, "step": steps},
-                         slots2, n_hard, self._dispatch_bucket,
-                         what="ring-enqueue")
+            with observe.annotate("ring_enqueue"):
+                faults.retry(self.ring.enqueue,
+                             {"h": slab, "cache": cache_slab, "step": steps},
+                             slots2, n_hard, self._dispatch_bucket,
+                             what="ring-enqueue")
 
     def _tick_fused(self) -> None:
         ring_buf = self.ring.ensure(self._ring_row_spec)
-        (self._c1, ring_buf, h, src, n_hard_dev, easy, hard, pred,
-         self._tok, self._pos, self._active_lane, conf) = _pool_tick_fused(
-            self._tok, self._c1, self._pos, self._active_lane,
-            self._start_lane, self._budget_lane, ring_buf, self._rows,
-            self.c_thr, s1=self.fns.s1_raw, backend=dispatch.kernel_backend())
+        with observe.annotate("pool_tick_fused"):
+            (self._c1, ring_buf, h, src, n_hard_dev, easy, hard, pred,
+             self._tok, self._pos, self._active_lane,
+             conf) = _pool_tick_fused(
+                self._tok, self._c1, self._pos, self._active_lane,
+                self._start_lane, self._budget_lane, ring_buf, self._rows,
+                self.c_thr, s1=self.fns.s1_raw,
+                backend=dispatch.kernel_backend())
         self.ring.put_buf(ring_buf)
         n_hard, hard_np = self._finish_tick(n_hard_dev, easy, hard, pred,
                                             conf)
@@ -1660,10 +1710,11 @@ class SyncScheduler:
     policy has no live pool to migrate (use the continuous scheduler)."""
 
     def __init__(self, server, n_slots: int, clock=None,
-                 max_len: Optional[int] = None):
+                 max_len: Optional[int] = None, events=None):
         self.server = server
         self.n_slots = n_slots
         self.max_len = max_len
+        self.events = events                 # see ContinuousScheduler
         self.clock = clock or Clock()
         self.queue: RequestQueue = RequestQueue(
             max_len=max_len, is_dup=lambda sid: sid in self.results)
@@ -1729,6 +1780,10 @@ class SyncScheduler:
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+        if self.events is not None:
+            self.events.emit("submit", sid=req.sample_id,
+                             arrival=req.arrival_time,
+                             n_tokens=req.n_tokens)
 
     def step(self) -> str:
         """Form and run ONE static batch (waiting for its last arrival —
@@ -1743,6 +1798,9 @@ class SyncScheduler:
         self.clock.advance_to(max(r.arrival_time for r in batch))
         for r in batch:
             self.stats.record_submit(r.sample_id, r.arrival_time)
+            if self.events is not None:
+                self.events.emit("admit", sid=r.sample_id, slot=-1,
+                                 prompt_len=len(r.prompt))
         prompts = [np.asarray(r.prompt, np.int32) for r in batch]
         n_max = max(r.n_tokens for r in batch)
         dec0, hard0 = self.stats.n_decisions, self.stats.n_stage2
@@ -1756,6 +1814,9 @@ class SyncScheduler:
             self.stats.record_finish(r.sample_id, t)
             n_dec = r.n_tokens - 1
             self._finished.append((r.sample_id, q_batch * n_dec, n_dec))
+            if self.events is not None:
+                self.events.emit("finish", sid=r.sample_id,
+                                 n_decisions=n_dec)
         self._busy_sids = set()
         if self.controller is not None:
             # one controller visit per static batch (the sync policy's

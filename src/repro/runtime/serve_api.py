@@ -238,7 +238,7 @@ def build(params, cfg, spec, sc, *, mode: str = "decode",
           scheduler: Optional[str] = "continuous", placement=None,
           n_slots: Optional[int] = None, max_len: Optional[int] = None,
           clock=None, host: bool = False, page_size: Optional[int] = None,
-          n_pages: Optional[int] = None):
+          n_pages: Optional[int] = None, events=None):
     """Build a serving object for any (mode, scheduler) point — the single
     construction path ``launch/serve.py``, the benchmarks and the examples
     share (the old ``build_*`` factories in ``runtime/serve_loop.py`` are
@@ -271,6 +271,9 @@ def build(params, cfg, spec, sc, *, mode: str = "decode",
     over ``n_pages`` allocatable pages (default: dense-equivalent
     capacity, ``n_slots * max_len / page_size`` — pass less to serve more
     slots than the dense store could hold at the same HBM budget)."""
+    # ``events`` (scheduler modes only) wires a telemetry.EventLog request-
+    # lifecycle feed into the scheduler — the observability plane
+    # (runtime/observe.Tracer / StatsSampler) subscribes to it.
     from repro.runtime import serve_loop as SL
 
     if mode not in _MODES:
@@ -296,6 +299,9 @@ def build(params, cfg, spec, sc, *, mode: str = "decode",
             return SL.HostLoopServer(*SL._stage_fns(params, cfg, spec), sc)
         s1, s2 = SL._stage_fns(params, cfg, spec, placement)
         return SL.TwoStageServer(s1, s2, sc, placement)
+    if events is not None and scheduler is None:
+        raise ValueError("events= is a scheduler-mode feed (the bare "
+                         "servers have no request lifecycle to emit)")
     # decode
     if scheduler is None:
         fns = SL.decode_stage_fns(params, cfg, spec,
@@ -317,7 +323,7 @@ def build(params, cfg, spec, sc, *, mode: str = "decode",
             SL.decode_stage_fns(params, cfg, spec, placement,
                                 page_size=page_size), sc, placement)
         return SL.SyncScheduler(server, n_slots, clock=clock,
-                                max_len=max_len)
+                                max_len=max_len, events=events)
     if max_len is None:
         raise ValueError("scheduler='continuous' needs max_len (the pool's "
                          "shared cache width)")
@@ -325,7 +331,7 @@ def build(params, cfg, spec, sc, *, mode: str = "decode",
         SL.decode_stage_fns(params, cfg, spec, placement,
                             page_size=page_size), sc,
         n_slots=n_slots, max_len=max_len, placement=placement, clock=clock,
-        n_pages=n_pages,
+        n_pages=n_pages, events=events,
         fns_factory=lambda pl: SL.decode_stage_fns(params, cfg, spec, pl,
                                                    page_size=page_size))
 

@@ -104,7 +104,9 @@ class EventLog:
     timestamp ``t``, an ``event`` tag, and arbitrary keyword fields. The
     sequence number keeps ordering meaningful even after old events fall
     off the deque, and survives ``clear()`` so flushed chunks of one
-    process's log never renumber.
+    process's log never renumber. ``n_dropped`` counts events lost to the
+    cap (FIFO overwrite) — a gap between ``seq`` extremes and ``len``
+    larger than ``n_dropped`` means someone ``clear()``-ed in between.
 
     ``subscribe`` registers a streaming callback invoked synchronously on
     every ``emit`` AFTER the event is buffered — the fleet router's
@@ -121,21 +123,28 @@ class EventLog:
         self._buf: Deque[dict] = deque(maxlen=cap)
         self._seq = 0
         self._subs: list = []
+        self._subs_t: tuple = ()     # emit iterates this frozen snapshot —
+        self.n_dropped = 0           # no per-event list copy on the hot path
 
     def subscribe(self, fn) -> "callable":
         """Register ``fn(event_dict)`` to observe every future emit.
-        Returns ``fn`` (decorator-friendly)."""
+        Returns ``fn`` (decorator-friendly). A (un)subscribe during an
+        in-flight emit takes effect from the NEXT emit."""
         self._subs.append(fn)
+        self._subs_t = tuple(self._subs)
         return fn
 
     def unsubscribe(self, fn) -> None:
         self._subs.remove(fn)
+        self._subs_t = tuple(self._subs)
 
     def emit(self, event: str, **fields) -> dict:
         self._seq += 1
         ev = {"seq": self._seq, "t": time.time(), "event": event, **fields}
+        if len(self._buf) == self.cap:
+            self.n_dropped += 1
         self._buf.append(ev)
-        for fn in list(self._subs):
+        for fn in self._subs_t:
             fn(ev)
         return ev
 

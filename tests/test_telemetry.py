@@ -1,0 +1,224 @@
+"""Units for the telemetry primitives the observability plane rides on:
+``EventLog`` (bounded buffer + seq + subscriber contract + drop
+accounting) and ``ControlWindow`` (visit-delta semantics), plus a
+hypothesis property over the ``observe.Tracer``'s span assembly — random
+interleavings of per-request event sequences must always assemble into
+exactly one well-nested span tree per request.
+"""
+import pytest
+
+from repro.runtime import observe
+from repro.runtime.telemetry import ControlWindow, EventLog
+
+
+# ---------------------------------------------------------------------------
+# EventLog
+# ---------------------------------------------------------------------------
+
+def test_eventlog_cap_overflow_counts_drops():
+    log = EventLog(cap=4)
+    for i in range(7):
+        log.emit("e", i=i)
+    assert len(log) == 4
+    assert log.n_dropped == 3
+    # FIFO overwrite: the retained window is the newest events, seqs
+    # continuous — seq identifies every event ever emitted, not a buffer
+    # index
+    assert [ev["seq"] for ev in log.as_list()] == [4, 5, 6, 7]
+    assert [ev["i"] for ev in log.as_list()] == [3, 4, 5, 6]
+
+
+def test_eventlog_seq_survives_clear():
+    log = EventLog(cap=8)
+    log.emit("a")
+    log.emit("b")
+    log.clear()
+    assert len(log) == 0
+    ev = log.emit("c")
+    assert ev["seq"] == 3          # clear() never renumbers
+    assert log.n_dropped == 0      # clear() is not a drop
+
+
+def test_eventlog_cap_validation():
+    with pytest.raises(ValueError):
+        EventLog(cap=0)
+
+
+def test_eventlog_subscribe_unsubscribe():
+    log = EventLog(cap=8)
+    seen = []
+    cb = log.subscribe(lambda ev: seen.append(ev["event"]))
+    log.emit("one")
+    log.unsubscribe(cb)
+    log.emit("two")
+    assert seen == ["one"]
+    with pytest.raises(ValueError):
+        log.unsubscribe(cb)        # unknown callback is a loud error
+
+
+def test_eventlog_subscriber_exception_propagates():
+    """Subscribers must not raise; when one does anyway the emitter sees
+    it (no swallow-and-continue — a silently dead feed is worse)."""
+    log = EventLog(cap=8)
+    log.subscribe(lambda ev: (_ for _ in ()).throw(RuntimeError("bad sub")))
+    with pytest.raises(RuntimeError, match="bad sub"):
+        log.emit("x")
+    assert len(log) == 1           # buffered BEFORE subscribers ran
+
+
+def test_eventlog_subscribe_during_emit_takes_effect_next_emit():
+    log = EventLog(cap=8)
+    late = []
+
+    def cb(ev):
+        if ev["event"] == "first":
+            log.subscribe(lambda e: late.append(e["event"]))
+
+    log.subscribe(cb)
+    log.emit("first")              # registers `late` mid-emit
+    assert late == []              # snapshot semantics: not for this event
+    log.emit("second")
+    assert late == ["second"]
+
+
+# ---------------------------------------------------------------------------
+# ControlWindow
+# ---------------------------------------------------------------------------
+
+def test_control_window_tick_aggregates():
+    w = ControlWindow()
+    w.observe(n_decisions=8, n_hard=2)
+    w.observe(n_decisions=6, n_hard=3)
+    assert w.ticks == 2
+    assert w.decisions == 14
+    assert w.q == pytest.approx(5 / 14)
+    assert w.mean_active == pytest.approx(7.0)
+    w.reset()
+    assert w.ticks == 0 and w.q == 0.0 and w.mean_active == 0.0
+
+
+def test_control_window_counter_deltas_across_reset():
+    """observe_counters receives LIFETIME values; windows see deltas vs
+    the previous visit, and the high-water marks survive reset() so a new
+    window never re-counts old stalls."""
+    w = ControlWindow()
+    w.observe(4, 1)
+    w.observe_counters(n_stalls=5, n_buckets=2, bucket_fill_sum=1.5)
+    assert w.stalls == 5 and w.buckets == 2
+    w.observe_counters(n_stalls=7, n_buckets=3, bucket_fill_sum=2.5)
+    assert w.stalls == 7 and w.buckets == 3          # +2, +1
+    w.reset()
+    w.observe(4, 0)
+    w.observe_counters(n_stalls=8, n_buckets=5, bucket_fill_sum=4.5)
+    assert w.stalls == 1 and w.buckets == 2          # deltas vs 7/3, not 0
+    assert w.mean_bucket_fill == pytest.approx(1.0)
+    assert w.stall_rate == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# span assembly: random interleavings -> one well-nested tree per request
+# ---------------------------------------------------------------------------
+
+def _request_script(sid, n_parks, with_router_submit):
+    """One request's event sequence as (tag, fields) steps, in its own
+    causal order. Interleaving across requests is the property input."""
+    steps = []
+    if with_router_submit:               # router submit seeds the root
+        steps.append(("submit", {"sid": sid, "tenant": "t"}))
+    steps.append(("submit", {"sid": sid, "arrival": 0.0, "n_tokens": 4}))
+    steps.append(("admit", {"sid": sid, "slot": sid % 3, "prompt_len": 4}))
+    for _ in range(n_parks):
+        steps.append(("park", {"sids": (sid,), "slots": (sid % 3,)}))
+        steps.append(("bucket", {"sids": (sid,), "take": 1, "capacity": 2}))
+    steps.append(("finish", {"sid": sid, "n_hard": n_parks,
+                             "n_decisions": 4}))
+    return steps
+
+
+def _interleave(scripts, order):
+    """Merge per-request scripts into one trace, preserving each script's
+    internal order; ``order`` is a sequence of request indices."""
+    idx = [0] * len(scripts)
+    merged = []
+    for r in order:
+        r = r % len(scripts)
+        # find the next script that still has steps, starting from r
+        for off in range(len(scripts)):
+            k = (r + off) % len(scripts)
+            if idx[k] < len(scripts[k]):
+                merged.append(scripts[k][idx[k]])
+                idx[k] += 1
+                break
+    for k, script in enumerate(scripts):       # drain the stragglers
+        merged.extend(script[idx[k]:])
+    return merged
+
+
+def test_tracer_assembles_simple_tree():
+    log = EventLog(cap=256)
+    tracer = observe.Tracer().attach(log)
+    for tag, fields in _request_script(0, n_parks=2,
+                                       with_router_submit=True):
+        log.emit(tag, **fields)
+    tracer.close()
+    comp = tracer.completeness(expect_sids={0})
+    assert comp["complete"], comp
+    names = sorted(s["name"] for s in tracer.spans)
+    assert names == ["decode", "queue_wait", "request",
+                     "stage2_wait", "stage2_wait"]
+    root = [s for s in tracer.spans if s["name"] == "request"][0]
+    assert root["args"]["n_hard"] == 2
+    assert root["args"]["tenant"] == "t"     # router submit won the root
+
+
+def test_tracer_orphan_and_open_detection():
+    log = EventLog(cap=256)
+    tracer = observe.Tracer().attach(log)
+    log.emit("admit", sid=7, slot=0, prompt_len=4)   # never submitted
+    log.emit("submit", sid=1, arrival=0.0, n_tokens=2)
+    tracer.close()
+    comp = tracer.completeness()
+    assert not comp["complete"]
+    assert comp["orphans"] == ["7"]
+    assert comp["open"] == ["1"]                     # submitted, no finish
+
+
+try:
+    from hypothesis import given, settings, strategies as st_h
+    _HAVE_HYP = True
+except ImportError:                                   # pragma: no cover
+    _HAVE_HYP = False
+
+
+if _HAVE_HYP:
+    @settings(max_examples=50, deadline=None)
+    @given(
+        n_parks=st_h.lists(st_h.integers(0, 3), min_size=1, max_size=6),
+        order=st_h.lists(st_h.integers(0, 5), min_size=0, max_size=60),
+        router=st_h.booleans(),
+    )
+    def test_tracer_random_interleavings(n_parks, order, router):
+        """Any interleaving of per-request event sequences (each request's
+        own causal order preserved) assembles into exactly one well-nested
+        span tree per request: one root, children inside the root
+        interval, park-episode count preserved, no orphans, nothing left
+        open."""
+        scripts = [_request_script(sid, k, router)
+                   for sid, k in enumerate(n_parks)]
+        log = EventLog(cap=4096)
+        tracer = observe.Tracer().attach(log)
+        for tag, fields in _interleave(scripts, order):
+            log.emit(tag, **fields)
+        tracer.close()
+        comp = tracer.completeness(expect_sids=set(range(len(n_parks))))
+        assert comp["complete"], comp
+        spans = tracer.spans
+        for sid, k in enumerate(n_parks):
+            mine = [s for s in spans if s["sid"] == sid]
+            assert sum(s["name"] == "request" for s in mine) == 1
+            assert sum(s["name"] == "queue_wait" for s in mine) == 1
+            assert sum(s["name"] == "decode" for s in mine) == 1
+            assert sum(s["name"] == "stage2_wait" for s in mine) == k
+            root = [s for s in mine if s["name"] == "request"][0]
+            for s in mine:
+                assert root["t0"] <= s["t0"] <= s["t1"] <= root["t1"]
